@@ -1,0 +1,2 @@
+from repro.cluster.manager import ClusterManager, TrainingJob  # noqa: F401
+from repro.cluster.faults import FaultInjector  # noqa: F401

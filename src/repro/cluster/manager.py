@@ -1,0 +1,256 @@
+"""Cluster manager: the paper's online RANK policy driving real training jobs.
+
+This is the integration layer that makes the paper's contribution a
+first-class framework feature:
+
+* A :class:`TrainingJob` is a DNN training program with checkpoint-based
+  early termination: a *stage* is ``steps_per_stage`` optimizer steps; at
+  each stage boundary a metric gate (e.g. validation-loss plateau) decides
+  whether the job continues — exactly the paper's multi-stage job model,
+  with the size distribution estimated from historical jobs.
+* The :class:`ClusterManager` is a discrete-event loop over W servers
+  (mesh slices).  Scheduling follows the paper §V: jobs are held in a
+  priority queue keyed by their *conditional rank* (Eq. 23 updated on
+  survived stages); when a server finishes a stage, the served job
+  competes with the queue head.
+* Fault tolerance: per-node exponential failures abort the affected
+  job's in-flight stage; the job resumes **the same stage** from its last
+  checkpoint (plus restart overhead) — failures never advance or
+  terminate a job (distinct from the paper's early termination).
+* Straggler mitigation: a stage whose runtime exceeds
+  ``deadline_factor × EWMA`` is re-dispatched (duplicate-and-race, the
+  winner counts).
+* Elastic scaling: ``resize(n_servers, at_time)`` events add/drain
+  servers at stage boundaries; the rank order is slice-width invariant.
+
+Jobs can be *simulated* (durations from the JobSpec — used for the
+paper-scale studies) or *real* (a runner callback executes actual jitted
+train steps on this host — used by examples/cluster_train_small.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable
+
+import numpy as np
+
+from repro.cluster.faults import FaultConfig, FaultInjector
+from repro.core import policies
+from repro.core.jobs import JobSpec
+
+__all__ = ["TrainingJob", "ClusterManager", "ClusterResult"]
+
+
+@dataclasses.dataclass
+class TrainingJob:
+    """A multi-stage job: spec for the scheduler + optional real runner."""
+
+    spec: JobSpec
+    steps_per_stage: int = 50
+    # runner(job, stage_idx) -> (wall_seconds, terminated_early: bool)
+    runner: Callable | None = None
+    name: str = ""
+
+    # runtime state (managed by ClusterManager)
+    stage: int = 0
+    completed: float = float("nan")
+    success: bool = False
+    restarts: int = 0
+    straggler_redispatches: int = 0
+
+    def realized_stop_stage(self, rng: np.random.Generator) -> int:
+        if self.spec.outcome_stage >= 0:
+            return self.spec.outcome_stage
+        return int(rng.choice(self.spec.num_stages, p=self.spec.probs))
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    mean_sojourn_successful: float
+    mean_sojourn_all: float
+    n_success: int
+    n_jobs: int
+    makespan: float
+    restarts: int
+    straggler_redispatches: int
+    policy: str
+
+
+_ARRIVE, _STAGE_DONE, _FAILURE, _RESIZE = 0, 1, 2, 3
+
+
+class ClusterManager:
+    def __init__(
+        self,
+        jobs: list[TrainingJob],
+        n_servers: int,
+        policy: str = "rank",
+        fault_cfg: FaultConfig | None = None,
+        nodes_per_server: int = 1,
+        rng: np.random.Generator | None = None,
+        resize_events: list[tuple[float, int]] | None = None,
+    ):
+        self.jobs = jobs
+        self.n_servers = n_servers
+        self.policy = policy
+        self.rng = rng or np.random.default_rng(0)
+        self.faults = FaultInjector(fault_cfg, self.rng) if fault_cfg else None
+        self.nodes_per_server = nodes_per_server
+        self.resize_events = sorted(resize_events or [])
+        specs = [j.spec for j in jobs]
+        self.idx_table = policies.index_table(specs, policy)
+        self._stage_durs = [j.spec.stage_increments() for j in jobs]
+        self._outcomes = np.array(
+            [j.realized_stop_stage(self.rng) for j in jobs], dtype=np.int64
+        )
+
+    # -- event helpers ---------------------------------------------------
+
+    def _stage_nominal(self, j: int, stage: int) -> float:
+        job = self.jobs[j]
+        if job.runner is not None:
+            wall, terminated = job.runner(job, stage)
+            # a real runner also overrides the realized outcome
+            if terminated:
+                self._outcomes[j] = min(stage, job.spec.num_stages - 1)
+            return float(wall)
+        return float(self._stage_durs[j][stage])
+
+    def run(self) -> ClusterResult:
+        jobs = self.jobs
+        n = len(jobs)
+        seq = itertools.count()
+        events: list[tuple[float, int, int, int]] = [
+            (j.spec.arrival, next(seq), _ARRIVE, i) for i, j in enumerate(jobs)
+        ]
+        for t, target in self.resize_events:
+            events.append((t, next(seq), _RESIZE, target))
+        heapq.heapify(events)
+
+        ready: list[tuple[float, int, int]] = []  # (index, seq, job)
+        free = self.n_servers
+        target_servers = self.n_servers
+        running: dict[int, int] = {}  # job -> dispatch epoch
+        epoch = itertools.count()
+        n_done = 0
+        ewma = None
+        makespan = 0.0
+        completion = np.full(n, np.nan)
+
+        if self.faults is not None:
+            t_fail = self.faults.next_failure_time(0.0, self._total_nodes())
+            heapq.heappush(events, (t_fail, next(seq), _FAILURE, -1))
+
+        def dispatch(j: int, now: float):
+            nonlocal ewma
+            job = jobs[j]
+            dur = self._stage_nominal(j, job.stage)
+            if self.faults is not None:
+                dur, straggled = self.faults.stage_runtime(dur)
+                if ewma is not None and dur > self.faults.cfg.deadline_factor * ewma:
+                    # duplicate-and-race: winner is the nominal re-dispatch
+                    job.straggler_redispatches += 1
+                    dur = min(dur, self._stage_nominal(j, job.stage))
+            ewma = dur if ewma is None else 0.9 * ewma + 0.1 * dur
+            ep = next(epoch)
+            running[j] = ep
+            heapq.heappush(events, (now + dur, next(seq), _STAGE_DONE, (j, ep)))
+
+        def push_ready(j: int):
+            heapq.heappush(
+                ready, (float(self.idx_table[j, jobs[j].stage]), next(seq), j)
+            )
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind != _FAILURE:  # an armed-but-idle failure timer is not work
+                makespan = max(makespan, now)
+
+            if kind == _ARRIVE:
+                j = payload
+                if free > 0:
+                    free -= 1
+                    dispatch(j, now)
+                else:
+                    push_ready(j)
+
+            elif kind == _RESIZE:
+                target_servers = payload
+                grow = target_servers - (free + len(running))
+                if grow > 0:
+                    free += grow
+                    while free > 0 and ready:
+                        free -= 1
+                        dispatch(heapq.heappop(ready)[2], now)
+                # shrink: drain at stage boundaries (handled in _STAGE_DONE)
+
+            elif kind == _FAILURE:
+                # pick a random running job (gangs are node-disjoint)
+                if running:
+                    j = list(running.keys())[self.rng.integers(len(running))]
+                    jobs[j].restarts += 1
+                    # abort in-flight stage: re-dispatch same stage after
+                    # restart overhead (checkpoint restore)
+                    del running[j]
+                    overhead = self.faults.cfg.restart_overhead
+                    heapq.heappush(
+                        events, (now + overhead, next(seq), _ARRIVE, j)
+                    )
+                    free += 1  # server freed during restore window
+                    if ready and free > 0:
+                        free -= 1
+                        dispatch(heapq.heappop(ready)[2], now)
+                if n_done < n:  # re-arm only while work remains
+                    t_fail = self.faults.next_failure_time(now, self._total_nodes())
+                    heapq.heappush(events, (t_fail, next(seq), _FAILURE, -1))
+
+            else:  # _STAGE_DONE
+                j, ep = payload
+                if running.get(j) != ep:
+                    continue  # stale event (job was failed/re-dispatched)
+                del running[j]
+                job = jobs[j]
+                done_stage = job.stage
+                job.stage += 1
+                busy = len(running)
+                if done_stage == self._outcomes[j]:  # job finished
+                    completion[j] = now
+                    job.completed = now
+                    job.success = done_stage == job.spec.num_stages - 1
+                    n_done += 1
+                    if busy + free + 1 > target_servers:  # drain (shrink)
+                        pass
+                    elif ready:
+                        dispatch(heapq.heappop(ready)[2], now)
+                    else:
+                        free += 1
+                else:  # alive: compete with queue head (paper §V)
+                    my_idx = float(self.idx_table[j, job.stage])
+                    if ready and ready[0][0] < my_idx:
+                        other = heapq.heappop(ready)[2]
+                        push_ready(j)
+                        dispatch(other, now)
+                    else:
+                        dispatch(j, now)
+
+        arrivals = np.array([j.spec.arrival for j in jobs])
+        success = np.array(
+            [self._outcomes[i] == jobs[i].spec.num_stages - 1 for i in range(n)]
+        )
+        sojourn = completion - arrivals
+        return ClusterResult(
+            mean_sojourn_successful=float(sojourn[success].mean()) if success.any() else 0.0,
+            mean_sojourn_all=float(np.nanmean(sojourn)),
+            n_success=int(success.sum()),
+            n_jobs=n,
+            makespan=float(makespan),
+            restarts=sum(j.restarts for j in jobs),
+            straggler_redispatches=sum(j.straggler_redispatches for j in jobs),
+            policy=self.policy,
+        )
+
+    def _total_nodes(self) -> int:
+        return self.n_servers * self.nodes_per_server

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ARCHS", "get_config", "get_smoke", "list_archs"]
+
+#: arch id -> module name under repro.configs
+ARCHS = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen3-8b": "qwen3_8b",
+    "granite-3-8b": "granite_3_8b",
+    "llama3-8b": "llama3_8b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+def _module(arch: str):
+    try:
+        mod = ARCHS[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; options: {sorted(ARCHS)}") from None
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).CONFIG
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).SMOKE
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,94 @@
+"""Assigned input shapes and the (arch × shape) cell matrix.
+
+Shapes (LM family; seq_len × global_batch):
+  train_4k     4,096 × 256   -> train_step
+  prefill_32k  32,768 × 32   -> prefill (logits + serving cache)
+  decode_32k   32,768 × 128  -> serve_step (1 new token, 32k KV cache)
+  long_500k    524,288 × 1   -> serve_step, sequence-parallel cache
+
+``long_500k`` requires sub-quadratic attention / bounded caches; pure
+full-attention archs are documented skips (DESIGN.md §4):
+  runs:  mamba2 (O(1) state), jamba (4/32 layers hold 500k KV, SP-sharded),
+         mixtral (SWA ring cache, window 4096)
+  skips: kimi-k2, qwen3-*, granite, llama3, llama-3.2-vision, seamless
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, list_archs
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "runnable_cells", "LONG_OK"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+#: archs whose long_500k cell is runnable (sub-quadratic / bounded cache)
+LONG_OK = {"mamba2-1.3b", "jamba-v0.1-52b", "mixtral-8x22b"}
+
+
+def arch_shape_config(arch: str, shape: str) -> ModelConfig:
+    """Arch config specialized to a shape (frontend lengths track seq)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if cfg.family == "encdec":
+        # encoder frames track the shape's sequence length
+        cfg = dataclasses.replace(cfg, frontend_frames=spec.seq_len)
+    return cfg
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train:   {tokens, labels}
+    prefill: {tokens} (+ frontend extras)
+    decode:  {token, pos} (+ cache specs are built by the launcher, which
+             also owns their shardings)
+    """
+    cfg = arch_shape_config(arch, shape)
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    i32 = np.int32
+    out: dict = {}
+    if spec.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif spec.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a seq_len cache
+        out["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+        out["pos"] = jax.ShapeDtypeStruct((), i32)
+    if cfg.family == "encdec" and spec.kind != "decode":
+        out["enc_frames"] = jax.ShapeDtypeStruct((b, cfg.frontend_frames, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm" and spec.kind != "decode":
+        out["image_embeds"] = jax.ShapeDtypeStruct((b, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+    return out
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) cells minus the documented long_500k skips."""
+    cells = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            cells.append((arch, shape))
+    return cells

@@ -1,0 +1,24 @@
+"""Core library: the paper's scheduling contribution as a composable module.
+
+Public surface:
+
+* :class:`repro.core.jobs.JobSpec` and workload generators (paper §IV-A2)
+* :mod:`repro.core.policies` — RANK (Eq. 23), SERPT, SR/Gittins, FIFO,
+  with conditional (stage-level) index tables
+* :mod:`repro.core.evaluator` — exact / Monte-Carlo expected sojourn of
+  successful jobs (JAX-vectorized), exhaustive OPTIMAL
+* :mod:`repro.core.theory` — Theorem III.2 / Lemma III.3 numerics
+* :mod:`repro.core.simulator` — multi-server online DES (paper §V)
+* :mod:`repro.core.trace` — Philly-statistics trace synthesis (paper §VI-A)
+"""
+
+from repro.core.jobs import JobSpec, generate_workload, pad_workload  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    erpt_values,
+    rank_order,
+    rank_values,
+    sr_rank_values,
+)
+from repro.core.evaluator import evaluate, evaluate_many, optimal_order  # noqa: F401
+from repro.core.simulator import SimResult, simulate  # noqa: F401
+from repro.core.trace import synthesize_trace  # noqa: F401

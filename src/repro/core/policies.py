@@ -1,0 +1,158 @@
+"""Scheduling policies from the paper and its baselines.
+
+Two kinds of policies exist in the paper:
+
+* **Sequence policies** — produce a static non-preemptive order in which
+  jobs run to success/termination (justified by Theorem III.1):
+  RANK (the paper's contribution, Eq. 23), RANDOM, and OPTIMAL
+  (exhaustive search, N <= 8).
+
+* **Stage-level (dynamic) policies** — re-rank at every checkpoint and may
+  preempt: SR (Gittins index, Eq. 2) and SERPT (shortest expected
+  remaining processing time).  These are represented by *index tables*
+  ``idx[i, s]`` = the job's priority index after having survived ``s``
+  checkpoints; the scheduler always serves the alive job with the minimum
+  index (ties by job position, matching the paper's deterministic runs).
+
+All index computations are vectorized over the padded (N, M) workload
+arrays so they can be reused by the JAX evaluator, the DES and the cluster
+manager.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jobs import JobSpec, Workload, pad_workload
+
+__all__ = [
+    "rank_values",
+    "erpt_values",
+    "sr_rank_values",
+    "rank_order",
+    "serpt_order",
+    "random_order",
+    "serpt_index_table",
+    "sr_index_table",
+    "rank_index_table",
+    "SEQUENCE_POLICIES",
+    "DYNAMIC_POLICIES",
+]
+
+_INF = np.float64(np.inf)
+
+
+# ---------------------------------------------------------------------------
+# Static (whole-job) indices
+# ---------------------------------------------------------------------------
+
+
+def erpt_values(jobs: Workload) -> np.ndarray:
+    """ERPT(i) = sum_j x_{i,j} p_{i,j} (paper Section III-A)."""
+    sizes, probs, _ = pad_workload(jobs)
+    return np.einsum("nm,nm->n", sizes, probs)
+
+
+def rank_values(jobs: Workload) -> np.ndarray:
+    """Paper Eq. (23): R(i) = E[size] / p_success."""
+    sizes, probs, num_stages = pad_workload(jobs)
+    p_succ = probs[np.arange(len(jobs)), num_stages - 1]
+    return np.einsum("nm,nm->n", sizes, probs) / p_succ
+
+
+def sr_rank_values(jobs: Workload) -> np.ndarray:
+    """Paper Eq. (2): SR rank (equivalently the Gittins index) at stage 0."""
+    return sr_index_table(jobs)[:, 0]
+
+
+def rank_order(jobs: Workload) -> np.ndarray:
+    """The RANK schedule: ascending R(i), stable in job position."""
+    return np.argsort(rank_values(jobs), kind="stable")
+
+
+def serpt_order(jobs: Workload) -> np.ndarray:
+    return np.argsort(erpt_values(jobs), kind="stable")
+
+
+def random_order(jobs: Workload, rng: np.random.Generator) -> np.ndarray:
+    return rng.permutation(len(jobs))
+
+
+# ---------------------------------------------------------------------------
+# Stage-level index tables  idx[i, s]  (s = checkpoints survived so far)
+# ---------------------------------------------------------------------------
+
+
+def _conditional_arrays(jobs: Workload):
+    """Yield (i, s, rem_sizes, rem_probs) for every (job, survived-stage)."""
+    for i, job in enumerate(jobs):
+        for s in range(job.num_stages):
+            surv = 1.0 - job.probs[:s].sum()
+            base = job.sizes[s - 1] if s > 0 else 0.0
+            rem_sizes = job.sizes[s:] - base
+            rem_probs = job.probs[s:] / surv
+            yield i, s, rem_sizes, rem_probs
+
+
+def serpt_index_table(jobs: Workload) -> np.ndarray:
+    """idx[i, s] = expected remaining processing time after s stages."""
+    n = len(jobs)
+    m = max(j.num_stages for j in jobs)
+    table = np.full((n, m), _INF)
+    for i, s, rem_sizes, rem_probs in _conditional_arrays(jobs):
+        table[i, s] = float(np.dot(rem_sizes, rem_probs))
+    return table
+
+
+def sr_index_table(jobs: Workload) -> np.ndarray:
+    """idx[i, s] = SR rank (Eq. 2) of the conditional remaining job."""
+    n = len(jobs)
+    m = max(j.num_stages for j in jobs)
+    table = np.full((n, m), _INF)
+    for i, s, rem_sizes, rem_probs in _conditional_arrays(jobs):
+        cum_p = np.cumsum(rem_probs)
+        cum_xp = np.cumsum(rem_sizes * rem_probs)
+        # r = min_j [ sum_{k<=j} x_k p_k + x_j (1 - sum_{k<=j} p_k) ] / sum p_k
+        num = cum_xp + rem_sizes * (1.0 - cum_p)
+        table[i, s] = float(np.min(num / np.maximum(cum_p, 1e-300)))
+    return table
+
+
+def rank_index_table(jobs: Workload) -> np.ndarray:
+    """idx[i, s] = conditional rank  E[rem size]/P(success | survived s).
+
+    Used by the *online* approach (paper Section V) where partially-served
+    jobs compete with queued ones by their up-to-date rank.
+    """
+    n = len(jobs)
+    m = max(j.num_stages for j in jobs)
+    table = np.full((n, m), _INF)
+    for i, s, rem_sizes, rem_probs in _conditional_arrays(jobs):
+        table[i, s] = float(np.dot(rem_sizes, rem_probs) / rem_probs[-1])
+    return table
+
+
+def fifo_index_table(jobs: Workload) -> np.ndarray:
+    """idx[i, s] = arrival time (constant over stages): first-come-first-served."""
+    n = len(jobs)
+    m = max(j.num_stages for j in jobs)
+    arr = np.array([j.arrival for j in jobs])
+    return np.broadcast_to(arr[:, None], (n, m)).copy()
+
+
+SEQUENCE_POLICIES = ("rank", "serpt", "random", "optimal")
+DYNAMIC_POLICIES = {
+    "sr": sr_index_table,
+    "serpt": serpt_index_table,
+    "rank": rank_index_table,
+    "fifo": fifo_index_table,
+}
+
+
+def index_table(jobs: Workload, policy: str) -> np.ndarray:
+    try:
+        return DYNAMIC_POLICIES[policy](jobs)
+    except KeyError:
+        raise ValueError(
+            f"unknown dynamic policy {policy!r}; options: {sorted(DYNAMIC_POLICIES)}"
+        ) from None

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the data-plane hot spots.
+
+The paper's own contribution is a scheduling policy (no kernel); these
+kernels serve the *jobs* that the policy schedules — the DNN training/
+serving programs whose compute hot spots dominate step time.
+
+Each kernel package has three modules:
+
+* ``kernel.py`` — the ``pl.pallas_call`` implementation with explicit
+  BlockSpec VMEM tiling (TPU target; validated with ``interpret=True``).
+* ``ops.py``    — the jit-ready public wrapper with ``impl`` dispatch
+  ("xla" reference path for CPU runs & dry-run lowering, "pallas" for
+  TPU, "interpret" for CPU correctness tests) and custom VJPs.
+* ``ref.py``    — the pure-jnp oracle used by tests and as the XLA path.
+
+Kernels: ``flash_attention`` (causal / sliding-window / GQA fused
+attention), ``ssd_scan`` (Mamba-2 state-space duality chunked scan),
+``moe_gemm`` (per-expert grouped GEMM with fused SwiGLU).
+"""

@@ -1,0 +1,380 @@
+"""FlashAttention for TPU as Pallas kernels (fwd + bwd).
+
+TPU adaptation (vs. the CUDA flash-attention algorithm): no warp-level
+primitives — instead the streaming accumulation runs across the *grid*
+(the innermost grid dimension is sequential on TPU), with running
+(m, l, acc) statistics held in VMEM scratch that persists across grid
+steps.  Block shapes are MXU-aligned (multiples of 128 on the lane dim);
+all matmuls use ``preferred_element_type=float32`` so bf16 inputs hit the
+MXU with f32 accumulation.
+
+Kernel layout is (B, H, S, D); ``ops.py`` transposes from the model's
+(B, S, H, D).  GQA is handled in the index maps (query head h reads KV
+head ``h // group``), so KV is never materialized per-q-head in HBM.
+
+Causal/sliding-window structure is exploited at the *block* level: the
+k-grid still iterates all blocks (Pallas grids are dense) but fully
+masked blocks are skipped via ``pl.when`` — on TPU this skips the compute
+while the (cheap) index bookkeeping proceeds.
+
+Backward follows the two-kernel FlashAttention-2 scheme:
+  * ``_dkv_kernel``: grid (B, Hkv, nk, G, nq) — for a fixed KV block,
+    stream all query heads in the GQA group and all q blocks, accumulating
+    dK/dV in scratch.  (G, nq) are the two innermost dims so the dK/dV
+    output block index is constant across them — a legal TPU revisit.
+  * ``_dq_kernel``:  grid (B, Hq, nq, nk) — accumulate dQ over KV blocks.
+Both consume the forward LSE and the precomputed ``delta = rowsum(dO*O)``
+(computed in ops.py; it is a cheap elementwise reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_fwd", "flash_dkv", "flash_dq"]
+
+NEG_INF = -1e30  # large-but-finite: avoids NaN from (-inf) - (-inf)
+LANES = 128  # TPU lane width: scratch stat tiles are (bq, LANES)
+
+
+def _block_visible(q_start, q_end, k_start, k_end, causal: bool, window):
+    """Whether any (i, j) pair in the block can be visible."""
+    vis = jnp.bool_(True)
+    if causal:
+        vis &= k_start <= q_end  # some key <= some query
+    if window is not None:
+        vis &= k_end > q_start - window
+    return vis
+
+
+def _pair_mask(q_ids, k_ids, causal: bool, window):
+    """(bq, bk) boolean visibility for explicit in-block masking."""
+    q = q_ids[:, None]
+    k = k_ids[None, :]
+    m = jnp.ones((q_ids.shape[0], k_ids.shape[0]), dtype=bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= k > q - window
+    return m
+
+
+def _needs_mask(q_start, q_end, k_start, k_end, causal: bool, window):
+    """Whether the block is only *partially* visible (mask must be applied)."""
+    need = jnp.bool_(False)
+    if causal:
+        need |= k_end > q_start  # some key could exceed some query
+    if window is not None:
+        need |= k_start <= q_end - window
+    return need
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+    *, scale, causal, window, bq, bk, nk,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_start = qi * bq
+    q_end = q_start + bq - 1
+    k_start = ki * bk
+    k_end = k_start + bk - 1
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(_block_visible(q_start, q_end, k_start, k_end, causal, window))
+    def _compute():
+        q = q_ref[0, 0]  # (bq, d)
+        k = k_ref[0, 0]  # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if causal or window is not None:
+            q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)[:, 0]
+            k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)[0, :]
+            s = jnp.where(_pair_mask(q_ids, k_ids, causal, window), s, NEG_INF)
+
+        m_prev = m_ref[:, 0]  # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)  # (bq,)
+        p = jnp.exp(s - m_cur[:, None])  # (bq, bk)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_cur
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+        # LSE; rows with no visible keys keep NEG_INF-ish values -> exp()=0.
+        lse_ref[0, 0] = m_ref[:, 0] + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def flash_fwd(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq ({sq},{skv}) not divisible by blocks ({bq},{bk})")
+    nq, nk = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk, nk=nk
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+    ]
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki, g=g: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki, g=g: (b_, h // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, qi, ki: (b_, h, qi)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dK/dV kernel
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_acc, dv_acc, *, scale, causal, window, bq, bk, ng, nq,
+):
+    gi = pl.program_id(3)
+    qi = pl.program_id(4)
+    ki = pl.program_id(2)
+
+    q_start = qi * bq
+    q_end = q_start + bq - 1
+    k_start = ki * bk
+    k_end = k_start + bk - 1
+
+    @pl.when((gi == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(_block_visible(q_start, q_end, k_start, k_end, causal, window))
+    def _compute():
+        q = q_ref[0, 0]  # (bq, d)
+        k = k_ref[0, 0]  # (bk, d)
+        v = v_ref[0, 0]
+        do = do_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        lse = lse_ref[0, 0]  # (bq,)
+        delta = delta_ref[0, 0]  # (bq,)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if causal or window is not None:
+            q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)[:, 0]
+            k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)[0, :]
+            s = jnp.where(_pair_mask(q_ids, k_ids, causal, window), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # (bq, bk), true probabilities
+        # dV += P^T dO
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # dS = P * (dO V^T - delta)
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta[:, None])  # (bq, bk)
+        # dK += dS^T Q * scale
+        dk_acc[...] += scale * jax.lax.dot_general(
+            ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((gi == ng - 1) & (qi == nq - 1))
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_dkv(
+    q, k, v, do, lse, delta, *, scale, causal, window,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    nq, nk = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _dkv_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, ng=g, nq=nq,
+    )
+    # index maps: query head = kvh * g + gi
+    qmap = lambda b_, kvh, ki, gi, qi, g=g: (b_, kvh * g + gi, qi, 0)
+    kmap = lambda b_, kvh, ki, gi, qi: (b_, kvh, ki, 0)
+    lmap = lambda b_, kvh, ki, gi, qi, g=g: (b_, kvh * g + gi, qi)
+    dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk, g, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), qmap),
+            pl.BlockSpec((1, 1, bk, d), kmap),
+            pl.BlockSpec((1, 1, bk, d), kmap),
+            pl.BlockSpec((1, 1, bq, d), qmap),
+            pl.BlockSpec((1, 1, bq), lmap),
+            pl.BlockSpec((1, 1, bq), lmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), kmap),
+            pl.BlockSpec((1, 1, bk, d), kmap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, skv, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, skv, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Backward: dQ kernel
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, dq_acc,
+    *, scale, causal, window, bq, bk, nk,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_start = qi * bq
+    q_end = q_start + bq - 1
+    k_start = ki * bk
+    k_end = k_start + bk - 1
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    @pl.when(_block_visible(q_start, q_end, k_start, k_end, causal, window))
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if causal or window is not None:
+            q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)[:, 0]
+            k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)[0, :]
+            s = jnp.where(_pair_mask(q_ids, k_ids, causal, window), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta[:, None])
+        dq_acc[...] += scale * jax.lax.dot_general(
+            ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_dq(
+    q, k, v, do, lse, delta, *, scale, causal, window,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    nq, nk = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _dq_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk, nk=nk
+    )
+    qmap = lambda b_, h, qi, ki: (b_, h, qi, 0)
+    kmap = lambda b_, h, qi, ki, g=g: (b_, h // g, ki, 0)
+    lmap = lambda b_, h, qi, ki: (b_, h, qi)
+    dq = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), qmap),
+            pl.BlockSpec((1, 1, bk, d), kmap),
+            pl.BlockSpec((1, 1, bk, d), kmap),
+            pl.BlockSpec((1, 1, bq, d), qmap),
+            pl.BlockSpec((1, 1, bq), lmap),
+            pl.BlockSpec((1, 1, bq), lmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), qmap),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq

@@ -1,0 +1,101 @@
+"""Public fused-attention op with implementation dispatch + custom VJP.
+
+``impl``:
+  * "xla"       — :func:`repro.kernels.flash_attention.ref.ref_attention`
+                  (differentiable via jax AD).  Default on CPU: used for
+                  smoke training runs and for dry-run lowering (same math
+                  and FLOPs as the kernel; collectives unaffected).
+  * "pallas"    — the TPU Pallas kernel (compiled via Mosaic).
+  * "interpret" — the Pallas kernel interpreted on CPU (correctness tests).
+  * "auto"      — "pallas" on TPU backends, else "xla".
+
+The Pallas paths carry a custom VJP (FlashAttention-2 two-kernel backward)
+so the same op is usable in train_step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import ref_attention
+
+__all__ = ["flash_attention"]
+
+Impl = Literal["auto", "xla", "pallas", "interpret"]
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# (B, S, H, D) <-> kernel layout (B, H, S, D)
+def _to_k(x):
+    return jnp.swapaxes(x, 1, 2)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _flash_pallas(q, k, v, scale, causal, window, block_q_k, interpret):
+    o, _ = K.flash_fwd(
+        q, k, v, scale=scale, causal=causal, window=window,
+        block_q=block_q_k[0], block_k=block_q_k[1], interpret=interpret,
+    )
+    return o
+
+
+def _flash_fwd_rule(q, k, v, scale, causal, window, block_q_k, interpret):
+    o, lse = K.flash_fwd(
+        q, k, v, scale=scale, causal=causal, window=window,
+        block_q=block_q_k[0], block_k=block_q_k[1], interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(scale, causal, window, block_q_k, interpret, res, do):
+    q, k, v, o, lse = res
+    # delta = rowsum(dO * O): cheap elementwise; done at the jnp level.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    common = dict(
+        scale=scale, causal=causal, window=window,
+        block_q=block_q_k[0], block_k=block_q_k[1], interpret=interpret,
+    )
+    dk, dv = K.flash_dkv(q, k, v, do, lse, delta, **common)
+    dq = K.flash_dq(q, k, v, do, lse, delta, **common)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_pallas.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: Impl = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Fused multi-head attention; see module docstring for ``impl``."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref_attention(q, k, v, causal=causal, window=window, scale=scale)
+    interpret = impl == "interpret"
+    o = _flash_pallas(
+        _to_k(q), _to_k(k), _to_k(v), scale, causal, window,
+        (block_q, block_k), interpret,
+    )
+    return _to_k(o)

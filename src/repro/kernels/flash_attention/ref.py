@@ -1,0 +1,85 @@
+"""Pure-jnp reference attention (the oracle and the XLA dispatch path).
+
+Layout convention (matches the models): q (B, Sq, Hq, D); k, v
+(B, Skv, Hkv, D) with Hq a multiple of Hkv (GQA).  Softmax statistics in
+float32 regardless of input dtype; output cast back to q.dtype.
+
+Masking supports ``causal`` and a sliding window of size ``window``
+(key j visible to query i iff i - window < j <= i, the Mistral/Mixtral
+convention), and an optional ``kv_len`` for decode against a padded
+cache (keys at positions >= kv_len are masked out).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ref_attention"]
+
+
+def _mask_bias(
+    sq: int,
+    skv: int,
+    causal: bool,
+    window: int | None,
+    kv_len=None,
+    q_offset=None,
+):
+    """(Sq, Skv) additive bias in f32: 0 where visible, -inf where masked."""
+    q_idx = jnp.arange(sq)[:, None]
+    if q_offset is not None:
+        q_idx = q_idx + q_offset  # decode: absolute query position
+    k_idx = jnp.arange(skv)[None, :]
+    visible = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        visible &= k_idx <= q_idx
+    if window is not None:
+        visible &= k_idx > q_idx - window
+    if kv_len is not None:
+        visible &= k_idx < kv_len
+    return jnp.where(visible, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def ref_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    kv_len=None,
+    q_offset=None,
+) -> jnp.ndarray:
+    """O(Sq*Skv) softmax attention with GQA head broadcasting."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    g = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+
+    # Inputs stay in their storage dtype (bf16 on the real path): the dots
+    # accumulate in f32 via preferred_element_type, so no f32 copies of the
+    # (potentially huge) K/V tensors are ever materialized — dot(bf16,bf16
+    # ->f32) is bit-identical to dot(f32(bf16), f32(bf16)) and matches the
+    # Pallas kernel's MXU usage.  P is cast to V's dtype before the PV dot,
+    # exactly as the kernel does.
+    qg = q.reshape(b, sq, hkv, g, d)
+    # scores: (B, Hkv, G, Sq, Skv), f32
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * jnp.float32(scale)
+    s = s + _mask_bias(sq, skv, causal, window, kv_len, q_offset)[None, None, None]
+    # Guard all-masked rows (possible when kv_len == 0): softmax of -inf row.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(b, sq, hq, d).astype(q.dtype)

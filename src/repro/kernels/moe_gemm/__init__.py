@@ -1,0 +1,1 @@
+from repro.kernels.moe_gemm.ops import moe_ffn  # noqa: F401

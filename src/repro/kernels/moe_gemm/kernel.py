@@ -1,0 +1,88 @@
+"""Per-expert SwiGLU FFN as a Pallas TPU kernel (grouped GEMM + fused act).
+
+TPU adaptation: CUDA MoE kernels scatter tokens with warp-level routing;
+on TPU the dispatch is a dense one-hot matmul done upstream (MXU-friendly)
+and this kernel consumes the already-dispatched (E, Cap, Dm) buffer. The
+win over plain XLA batched einsum is the *fusion*: gate/up GEMMs, SiLU,
+elementwise product and the down GEMM run per (expert, token-block,
+ff-block) tile without materializing the (E, Cap, Dff) activations in HBM
+— at Dff=16 K (Mixtral) that intermediate is 8× the token buffer.
+
+Grid: (E, n_cap, n_ff) — ff innermost; the f32 (bc, Dm) accumulator
+lives in VMEM scratch across ff steps.  Tiles: bc×Dm + 2·(Dm×bf) +
+bf×Dm + acc ≈ 128·6144·4B + 2·6144·128·2B + ... ≲ 10 MiB at the Mixtral
+shape with (bc, bf) = (128, 128) — inside the v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_ffn_fwd"]
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nf):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # (bc, Dm)
+    wg = wg_ref[0]  # (Dm, bf)
+    wu = wu_ref[0]
+    wd = wd_ref[0]  # (bf, Dm)
+    h_g = jax.lax.dot_general(
+        x, wg, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    h_u = jax.lax.dot_general(
+        x, wu, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    act = (jax.nn.silu(h_g) * h_u).astype(x.dtype)  # (bc, bf)
+    acc_ref[...] += jax.lax.dot_general(
+        act, wd, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(fi == nf - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_ffn_fwd(
+    x: jax.Array,   # (E, Cap, Dm)
+    wg: jax.Array,  # (E, Dm, Dff)
+    wu: jax.Array,
+    wd: jax.Array,  # (E, Dff, Dm)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    e, cap, dm = x.shape
+    dff = wg.shape[-1]
+    bc = min(block_c, cap)
+    bf = min(block_f, dff)
+    if cap % bc or dff % bf:
+        raise ValueError(f"cap {cap} / dff {dff} not divisible by ({bc},{bf})")
+    nc, nf = cap // bc, dff // bf
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nf=nf),
+        grid=(e, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, bc, dm), lambda e_, ci, fi: (e_, ci, 0)),
+            pl.BlockSpec((1, dm, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, dm, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, bf, dm), lambda e_, ci, fi: (e_, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, dm), lambda e_, ci, fi: (e_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, dm), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, dm), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)
+    return out

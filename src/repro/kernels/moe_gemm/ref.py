@@ -1,0 +1,23 @@
+"""Reference per-expert SwiGLU FFN over dispatched token buffers.
+
+Input is the *dispatched* tensor (tokens already gathered into per-expert
+capacity buffers by the router — see repro.models.moe): x (E, Cap, Dm).
+Weights: wg/wu (E, Dm, Dff), wd (E, Dff, Dm).  Output (E, Cap, Dm).
+
+This is the oracle and the XLA dispatch path (einsum batched over E —
+XLA turns it into grouped GEMMs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn_ref"]
+
+
+def moe_ffn_ref(x, wg, wu, wd):
+    h_g = jnp.einsum("ecd,edf->ecf", x, wg)
+    h_u = jnp.einsum("ecd,edf->ecf", x, wu)
+    act = jax.nn.silu(h_g.astype(jnp.float32)) * h_u.astype(jnp.float32)
+    return jnp.einsum("ecf,efd->ecd", act.astype(x.dtype), wd)

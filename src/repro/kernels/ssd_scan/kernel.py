@@ -1,0 +1,127 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the CUDA
+implementation leans on warp-level parallel scans; on TPU we use the
+*matmul form* of SSD so the MXU does the heavy lifting — per chunk of
+length C the intra-chunk contribution is two (C×N)·(N×C)/(C×C)·(C×P)
+matmuls, and the inter-chunk recurrence is a sequential pass over chunks
+carried in VMEM scratch (the innermost grid dim is sequential on TPU, so
+the (N, P) running state simply persists across chunk steps).
+
+Grid: (B, H, n_chunks).  Per-step VMEM working set (C=256, N=128, P=64,
+f32): x (C,P) 64 KiB, B/C (C,N) 128 KiB each, L (C,C) 256 KiB, state
+(N,P) 32 KiB — comfortably under the ~16 MiB v5e VMEM budget, with C and
+P both MXU-aligned (multiples of 128/64).
+
+Inputs are pre-arranged by ops.py to kernel layout:
+  x  (B, H, S, P)   dt (B, H, S)   dA (B, H, S)  [= dt * A[h], <= 0]
+  Bm (B, G, S, N)   Cm (B, G, S, N)
+Outputs: y (B, H, S, P) and the final state (B, H, N, P) (for decode
+priming / sequence-parallel chaining).  The D·x skip and group expansion
+are handled outside (elementwise; XLA fuses them).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_fwd"]
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref, state,
+                *, chunk, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (C, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (C,)
+    da = da_ref[0, 0].astype(jnp.float32)  # (C,)
+    Bc = b_ref[0, 0].astype(jnp.float32)  # (C, N)
+    Cc = c_ref[0, 0].astype(jnp.float32)  # (C, N)
+
+    cum = jnp.cumsum(da)  # (C,)
+    # intra-chunk lower-triangular decay matrix  L[t,s] = exp(cum_t - cum_s)
+    diff = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    L = jnp.where(tri, jnp.exp(diff), 0.0)  # (C, C)
+    scores = (
+        jax.lax.dot_general(
+            Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * L
+        * dt[None, :]
+    )  # (C, C); column s carries the dt_s discretization weight
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, P)
+    # inter-chunk: contribution of the carried state
+    y += jax.lax.dot_general(
+        Cc * jnp.exp(cum)[:, None], state[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: h' = exp(cum_last) h + B^T (x * dt * exp(cum_last - cum))
+    w = jnp.exp(cum[-1] - cum) * dt  # (C,)
+    state[...] = jnp.exp(cum[-1]) * state[...] + jax.lax.dot_general(
+        Bc, x * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        st_ref[0, 0] = state[...]
+
+
+def ssd_fwd(
+    x: jax.Array,   # (B, H, S, P)
+    dt: jax.Array,  # (B, H, S)
+    da: jax.Array,  # (B, H, S) = dt * A[h]
+    Bm: jax.Array,  # (B, G, S, N)
+    Cm: jax.Array,  # (B, G, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, h, s, p = x.shape
+    g = Bm.shape[1]
+    n = Bm.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by chunk {c}")
+    nc = s // c
+
+    kernel = functools.partial(_ssd_kernel, chunk=c, nc=nc)
+    gmap = lambda b_, h_, ci, g=g, h=h: (b_, h_ // (h // g), ci, 0)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda b_, h_, ci: (b_, h_, ci, 0)),
+            pl.BlockSpec((1, 1, c), lambda b_, h_, ci: (b_, h_, ci)),
+            pl.BlockSpec((1, 1, c), lambda b_, h_, ci: (b_, h_, ci)),
+            pl.BlockSpec((1, 1, c, n), gmap),
+            pl.BlockSpec((1, 1, c, n), gmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda b_, h_, ci: (b_, h_, ci, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, da, Bm, Cm)
+    return y, st

@@ -1,0 +1,84 @@
+"""Public SSD op with implementation dispatch + custom VJP.
+
+Forward dispatch mirrors flash_attention.ops.  The backward of the Pallas
+path recomputes through :func:`ref.ssd_chunked` (jax AD over the chunked
+scan): the SSD backward is itself a chunked scan of the same cost class,
+and recompute keeps the kernel surface small while remaining exact
+(validated against AD of the oracle in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as K
+from repro.kernels.ssd_scan.ref import ssd_chunked
+
+__all__ = ["ssd_scan"]
+
+Impl = Literal["auto", "xla", "pallas", "interpret"]
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssd_pallas(x, dt, A, Bm, Cm, D, chunk, interpret):
+    return _ssd_pallas_fwd(x, dt, A, Bm, Cm, D, chunk, interpret)[0]
+
+
+def _ssd_pallas_fwd(x, dt, A, Bm, Cm, D, chunk, interpret):
+    b, s, h, p = x.shape
+    xk = jnp.swapaxes(x, 1, 2)  # (B, H, S, P)
+    dtk = jnp.moveaxis(dt, 1, 2)  # (B, H, S)
+    dak = dtk * A[None, :, None].astype(dtk.dtype)
+    Bk = jnp.swapaxes(Bm, 1, 2)  # (B, G, S, N)
+    Ck = jnp.swapaxes(Cm, 1, 2)
+    y, st = K.ssd_fwd(xk, dtk, dak, Bk, Ck, chunk=chunk, interpret=interpret)
+    y = jnp.swapaxes(y, 1, 2) + (D[None, None, :, None] * x).astype(y.dtype)
+    out = (y.astype(x.dtype), jnp.swapaxes(st, 1, 1))  # st already (B,H,N,P)
+    return out, (x, dt, A, Bm, Cm, D)
+
+
+def _ssd_pallas_bwd(chunk, interpret, res, cts):
+    x, dt, A, Bm, Cm, D = res
+    dy, dstate = cts
+
+    def f(x, dt, A, Bm, Cm, D):
+        return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, Bm, Cm, D)
+    return vjp((dy, dstate))
+
+
+_ssd_pallas.defvjp(
+    lambda x, dt, A, Bm, Cm, D, chunk, interpret: (
+        _ssd_pallas_fwd(x, dt, A, Bm, Cm, D, chunk, interpret)
+    ),
+    _ssd_pallas_bwd,
+)
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (softplus-ed, > 0)
+    A: jax.Array,   # (H,)       (negative)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    D: jax.Array,   # (H,)
+    *,
+    chunk: int = 128,
+    impl: Impl = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan; returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    return _ssd_pallas(x, dt, A, Bm, Cm, D, chunk, impl == "interpret")

@@ -1,0 +1,140 @@
+"""Reference implementations of the Mamba-2 SSD (state-space duality) scan.
+
+Semantics (discretized selective state space, arXiv:2405.21060):
+
+    h[t] = exp(dt[t] * A) * h[t-1] + dt[t] * x[t] ⊗ B[t]
+    y[t] = C[t] · h[t] + D * x[t]
+
+with per-head scalar decay ``A < 0``, per-step ``dt > 0`` (softplus applied
+upstream), states h of shape (N, P) per head.
+
+Two oracles:
+
+* :func:`ssd_quadratic` — O(S²) fully-materialized "attention form";
+  ground truth for tests (small S only).
+* :func:`ssd_chunked`   — O(S·C) chunked scan in pure jnp (lax.scan over
+  chunks).  This is the differentiable XLA dispatch path used for CPU
+  training and dry-run lowering, and the algorithmic blueprint the Pallas
+  kernel implements with VMEM tiles.
+
+Shapes: x (B, S, H, P); dt (B, S, H); A (H,); Bm/Cm (B, S, G, N) with
+H a multiple of G; D (H,).  Returns y (B, S, H, P) and final state
+(B, H, N, P).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_quadratic", "ssd_chunked"]
+
+
+def _expand_groups(m: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group H/G times."""
+    g = m.shape[2]
+    return jnp.repeat(m, h // g, axis=2)
+
+
+def ssd_quadratic(x, dt, A, Bm, Cm, D, init_state=None):
+    """O(S²) materialized form: y = (C·Bᵀ ∘ L) (dt∘x) + D x."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = _expand_groups(Bm.astype(jnp.float32), h)
+    Cf = _expand_groups(Cm.astype(jnp.float32), h)
+    dA = dtf * A.astype(jnp.float32)  # (B, S, H), <= 0
+    cum = jnp.cumsum(dA, axis=1)  # (B, S, H)
+    # L[t, s'] = exp(cum[t] - cum[s']) for t >= s' else 0
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, T, S', H)
+    tri = jnp.tril(jnp.ones((s, s), dtype=bool))
+    L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bthn,bshn->btsh", Cf, Bf) * L  # (B, T, S', H)
+    xb = xf * dtf[..., None]  # (B, S, H, P)
+    y = jnp.einsum("btsh,bshp->bthp", scores, xb)
+    if init_state is not None:
+        # contribution of the incoming state: C[t] exp(cum[t]) · h0
+        y = y + jnp.einsum(
+            "bthn,bhnp->bthp", Cf * jnp.exp(cum)[..., None], init_state.astype(jnp.float32)
+        )
+    y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    # final state: h[S-1] = sum_s exp(cum[-1]-cum[s]) dt[s] B[s] ⊗ x[s] (+ decayed h0)
+    w = jnp.exp(cum[:, -1:, :] - cum) * dtf  # (B, S, H)
+    state = jnp.einsum("bshn,bshp->bhnp", Bf * w[..., None], xf)
+    if init_state is not None:
+        state = state + jnp.exp(cum[:, -1])[:, :, None, None] * init_state.astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, init_state=None, chunk: int = 128):
+    """O(S·C) chunked scan (lax.scan over chunks) — differentiable XLA path."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = _expand_groups(Bm.astype(jnp.float32), h).reshape(b, nc, chunk, h, n)
+    Cf = _expand_groups(Cm.astype(jnp.float32), h).reshape(b, nc, chunk, h, n)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af  # (B, NC, C, H)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc, cumc = inp  # leading dim B; chunk axis next
+        # intra-chunk ("diagonal block")
+        diff = cumc[:, :, None, :] - cumc[:, None, :, :]  # (B, T, S', H)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthn,bshn->btsh", Cc, Bc) * L
+        y = jnp.einsum("btsh,bshp->bthp", scores, xc * dtc[..., None])
+        # inter-chunk: incoming state
+        y = y + jnp.einsum("bthn,bhnp->bthp", Cc * jnp.exp(cumc)[..., None], state)
+        # state update
+        w = jnp.exp(cumc[:, -1:, :] - cumc) * dtc  # (B, C, H)
+        state = jnp.exp(cumc[:, -1])[:, :, None, None] * state + jnp.einsum(
+            "bshn,bshp->bhnp", Bc * w[..., None], xc
+        )
+        return state, y
+
+    state0 = (
+        jnp.zeros((b, h, n, p), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    # scan over the chunk axis: move it to the front
+    inps = (
+        xf.swapaxes(0, 1),
+        dtf.swapaxes(0, 1),
+        Bf.swapaxes(0, 1),
+        Cf.swapaxes(0, 1),
+        cum.swapaxes(0, 1),
+    )
+    state, ys = jax.lax.scan(body, state0, inps)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, state):
+    """Single-token recurrence for serving.
+
+    x (B, H, P); dt (B, H); Bm/Cm (B, G, N); state (B, H, N, P).
+    Returns (y (B, H, P), new_state).
+    """
+    b, h, p = x.shape
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = _expand_groups(Bm.astype(jnp.float32)[:, None], h)[:, 0]  # (B, H, N)
+    Cf = _expand_groups(Cm.astype(jnp.float32)[:, None], h)[:, 0]
+    decay = jnp.exp(dtf * A.astype(jnp.float32))  # (B, H)
+    state = decay[..., None, None] * state + jnp.einsum(
+        "bhn,bhp->bhnp", Bf * dtf[..., None], xf
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, state) + D.astype(jnp.float32)[:, None] * xf
+    return y.astype(x.dtype), state

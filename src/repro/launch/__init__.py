@@ -1,0 +1,1 @@
+"""Launch plane: meshes, dry-run lowering, trainer/server entry points."""

@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract the roofline inputs.
+
+MUST be run as its own process (``python -m repro.launch.dryrun ...``):
+the XLA_FLAGS line above executes before any jax import, giving this
+process 512 placeholder CPU devices so ``jax.make_mesh`` can build the
+(16,16) single-pod and (2,16,16) multi-pod meshes.  Nothing here
+allocates real buffers — inputs are ShapeDtypeStructs and compilation is
+AOT (``.lower().compile()``).
+
+Artifacts: one JSON per cell under --out (default artifacts/dryrun/),
+consumed by launch/roofline.py and EXPERIMENTS.md.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import LONG_OK, SHAPES, arch_shape_config, input_specs, runnable_cells
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import ServePlan, default_serve_plan, make_decode_fn, make_prefill_fn
+from repro.launch.train import default_plan, make_train_step
+from repro.models import transformer as T
+from repro.parallel.sharding import logical_sharding
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if not isinstance(x, jax.ShapeDtypeStruct)
+        else x,
+        tree,
+    )
+
+
+def _sharded_bytes(abstract_tree, shardings, n_devices: int) -> int:
+    """Per-chip bytes of a sharded pytree (parameters / opt state / cache)."""
+    total = 0
+    leaves = jax.tree.leaves(abstract_tree)
+    shard_leaves = (
+        jax.tree.leaves(shardings, is_leaf=lambda s: s is None)
+        if shardings is not None
+        else [None] * len(leaves)
+    )
+    for leaf, sh in zip(leaves, shard_leaves):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        nbytes = n * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        if sh is not None and hasattr(sh, "shard_shape"):
+            local = int(np.prod(sh.shard_shape(leaf.shape))) if leaf.shape else 1
+            nbytes = local * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        total += nbytes
+    return total
+
+
+def _depth_points(cfg) -> tuple[int, int, int]:
+    """(L1, L2, period) for depth extrapolation (in layers)."""
+    if cfg.family == "hybrid":
+        p = cfg.attn_period
+    elif cfg.family == "vlm":
+        p = cfg.cross_attn_period
+    else:
+        p = 1
+    return p, 2 * p, p
+
+
+def _reduced(cfg, n_layers: int):
+    kw = dict(n_layers=n_layers, scan_layers=False)
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+SERVE_TP_WEIGHTS = os.environ.get("REPRO_SERVE_TP_WEIGHTS", "") == "1"
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, cfg=None, mesh=None):
+    """Lower + compile one cell; returns (lowered, compiled, aux dict)."""
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg is None:
+        cfg = arch_shape_config(arch, shape)
+    spec = SHAPES[shape]
+    specs = input_specs(arch, shape)
+    long_context = shape == "long_500k"
+
+    if spec.kind == "train":
+        plan = default_plan(cfg, mesh)
+        step = make_train_step(plan)
+        params = T.abstract_params(cfg)
+        from repro.optim import adamw as opt
+
+        opt_state = jax.eval_shape(
+            lambda p: opt.adamw_init(p, plan.opt_cfg), params
+        )
+        args = (params, opt_state, specs)
+        state_shardings = (plan.param_shardings(), plan.opt_shardings(None))
+        state_abstract = (params, opt_state)
+    elif spec.kind == "prefill":
+        plan = default_serve_plan(cfg, mesh, spec, tp_weights=SERVE_TP_WEIGHTS)
+        step = make_prefill_fn(plan)
+        params = T.abstract_params(cfg)
+        batch = {k: v for k, v in specs.items()}
+        args = (params, batch)
+        state_shardings = (plan.param_shardings(),)
+        state_abstract = (params,)
+    else:  # decode
+        plan = default_serve_plan(cfg, mesh, spec, long_context=long_context,
+                                  tp_weights=SERVE_TP_WEIGHTS)
+        with_memory = cfg.family in ("encdec", "vlm")
+        step = make_decode_fn(plan, with_memory=with_memory)
+        params = T.abstract_params(cfg)
+        cache = _abstract(T.abstract_cache(cfg, spec.global_batch, spec.seq_len))
+        args = [params, specs["token"], cache, specs["pos"]]
+        if with_memory:
+            s_mem = cfg.frontend_frames if cfg.family == "encdec" else cfg.num_image_tokens
+            n_stack = (
+                cfg.n_layers if cfg.family == "encdec"
+                else cfg.n_layers // cfg.cross_attn_period
+            )
+            mem_shape = (n_stack, spec.global_batch, s_mem, cfg.n_kv_heads, cfg.hd)
+            mem = jax.ShapeDtypeStruct(mem_shape, cfg.dtype)
+            args.append((mem, mem))
+        args = tuple(args)
+        state_shardings = (plan.param_shardings(), plan.cache_shardings())
+        state_abstract = (params, cache)
+
+    t0 = time.perf_counter()
+    lowered = step.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    n_dev = mesh.devices.size
+    state_bytes = sum(
+        _sharded_bytes(a, s, n_dev) for a, s in zip(state_abstract, state_shardings)
+    )
+    aux = {
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": int(n_dev),
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+        "state_bytes_per_chip": int(state_bytes),
+        "kind": spec.kind,
+        "cfg": cfg,
+        "spec": spec,
+    }
+    return lowered, compiled, aux
+
+
+def _cell_costs(compiled) -> tuple[float, float, dict]:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = RL.collective_bytes(compiled.as_text())
+    return flops, bytes_accessed, coll
+
+
+def extrapolated_costs(arch, shape, multi_pod, base_cfg, mesh):
+    """Per-chip flops/bytes/collective-bytes at full depth.
+
+    XLA's cost analysis counts a while-loop (scan) body ONCE, so the full
+    scanned program under-reports depth-dependent cost.  We compile two
+    small UNROLLED programs (1 and 2 periods deep) with the real widths
+    and shapes, and extrapolate linearly in depth — exact for
+    depth-homogeneous stacks (all ours are).
+    """
+    l1, l2, period = _depth_points(base_cfg)
+    f = {}
+    for L in (l1, l2):
+        cfg_r = _reduced(base_cfg, L)
+        _, compiled, _ = lower_cell(arch, shape, multi_pod, cfg=cfg_r, mesh=mesh)
+        f[L] = _cell_costs(compiled)
+    n_per = (base_cfg.n_layers - l1) // period
+    def ext(i, key=None):
+        a = f[l1][i] if key is None else f[l1][i].get(key, 0)
+        b = f[l2][i] if key is None else f[l2][i].get(key, 0)
+        return a + (b - a) * n_per
+    flops = ext(0)
+    bytes_accessed = ext(1)
+    coll = {k: int(ext(2, k)) for k in f[l1][2]}
+    return flops, bytes_accessed, coll
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def analyze_cell(arch: str, shape: str, multi_pod: bool, overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_cfg = arch_shape_config(arch, shape)
+    if overrides:
+        base_cfg = dataclasses.replace(base_cfg, **overrides)
+    lowered, compiled, aux = lower_cell(arch, shape, multi_pod, cfg=base_cfg, mesh=mesh)
+    cfg, spec = aux.pop("cfg"), aux.pop("spec")
+
+    # full-depth compiled artifact: memory picture + loop-body collectives
+    raw_flops, raw_bytes, raw_coll = _cell_costs(compiled)
+    try:
+        mem = compiled.memory_analysis()
+        mem_fields = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception:  # CPU backend may not implement it
+        mem_fields = {}
+
+    # depth-extrapolated per-chip costs (see docstring)
+    flops, bytes_accessed, coll = extrapolated_costs(
+        arch, shape, multi_pod, base_cfg, mesh
+    )
+    roof = RL.roofline_terms(flops, bytes_accessed, coll)
+
+    mflops = RL.model_flops(cfg, spec, spec.kind)
+    n_dev = aux["n_devices"]
+    useful_ratio = mflops / (flops * n_dev) if flops else float("nan")
+
+    return {
+        "arch": arch,
+        "shape": shape,
+        "overrides": overrides or {},
+        **aux,
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": bytes_accessed,
+        "raw_loop_counted_once": {
+            "flops": raw_flops, "bytes": raw_bytes, "collectives": raw_coll,
+        },
+        "memory_analysis": mem_fields,
+        "model_flops_total": mflops,
+        "useful_flops_ratio": useful_ratio,
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+        "roofline": roof,
+        "hlo_collectives": coll,
+        "hlo_bytes": len(compiled.as_text()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fail-fast", action="store_true")
+    ap.add_argument(
+        "--override", nargs="*", default=None, metavar="KEY=VAL",
+        help="ModelConfig overrides for perf hillclimbs, e.g. remat=dots "
+             "logit_chunk=8192 moe_group=4096",
+    )
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.override)
+
+    cells = runnable_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                t0 = time.perf_counter()
+                row = analyze_cell(arch, shape, multi, overrides=overrides)
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1)
+                r = row["roofline"]
+                print(
+                    f"[ok] {tag}: compile {row['t_compile_s']:.1f}s "
+                    f"flops/chip {row['flops_per_chip']:.3e} "
+                    f"dominant {r['dominant']} frac {r['roofline_fraction']:.2f} "
+                    f"state {row['state_bytes_per_chip']/2**30:.2f} GiB/chip",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+                if args.fail_fast:
+                    raise
+    if failures:
+        print(f"{len(failures)} failures:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print(f"all {len(cells) * len(meshes)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

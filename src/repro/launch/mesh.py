@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first backend init —
+the dry-run sets XLA_FLAGS before importing anything that calls into jax).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+
+POD_SHAPE = (16, 16)  # 256 chips per pod (v5e)
+MULTIPOD_SHAPE = (2, 16, 16)  # 2 pods = 512 chips
+
+
+def _auto(n: int):
+    # pin current GSPMD semantics (jax 0.8 default changes in 0.9)
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The (data, model) single-pod mesh or (pod, data, model) 2-pod mesh."""
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"asked for {data}x{model} mesh but only {n} devices")
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

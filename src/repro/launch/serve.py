@@ -1,0 +1,151 @@
+"""Serving: jitted prefill / decode step factories with cache sharding.
+
+``make_prefill_fn``: (params, batch) -> (logits, cache) — the
+inference-prefill program (logits for the prompt + the serving cache).
+
+``make_decode_fn``: (params, token, cache, pos) -> (logits, cache) — one
+new token against a seq_len cache; the cache is donated, so the compiled
+program updates it in place.  For long-context (batch=1) cells the
+``sp=True`` path shards the KV cache over the "data" axis and uses the
+distributed LSE-combining decode attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (
+    AxisRules,
+    ShardingCtx,
+    logical_sharding,
+    rules_for,
+    shard_pytree_spec,
+)
+
+__all__ = ["ServePlan", "make_prefill_fn", "make_decode_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    cfg: ModelConfig
+    mesh: Any
+    rules: AxisRules
+    max_len: int
+    batch: int
+    sp: bool = False  # sequence-parallel cache (long-context decode)
+    cache_rules: AxisRules | None = None  # cache-specific rules (decode batch)
+
+    @property
+    def ctx(self) -> ShardingCtx:
+        return ShardingCtx(self.mesh, self.rules)
+
+    def param_shardings(self):
+        if self.mesh is None:
+            return None
+        return shard_pytree_spec(T.param_logical(self.cfg), self.mesh, self.rules)
+
+    def cache_shardings(self):
+        if self.mesh is None:
+            return None
+        logical = T.cache_logical(self.cfg)
+        rules = self.cache_rules or self.rules
+        return jax.tree.map(
+            lambda log: logical_sharding(log, self.mesh, rules),
+            logical,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+
+def default_serve_plan(
+    cfg, mesh, shape_spec, *, long_context=False, tp_weights=False
+) -> ServePlan:
+    model_axis = (
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        if mesh is not None
+        else 1
+    )
+    decode = shape_spec.kind == "decode" and not long_context
+    rules = rules_for(
+        cfg, long_context=long_context, decode_batch=decode, model_axis=model_axis
+    )
+    if tp_weights:
+        from repro.parallel.sharding import serving_weight_rules
+
+        rules = serving_weight_rules(rules)
+        cache_rules = rules  # cache follows the TP-serving layout
+    else:
+        # the serving cache shards its batch over the full mesh: it is
+        # the resident state (prefill emits it, decode carries it)
+        cache_rules = rules_for(
+            cfg, long_context=long_context, decode_batch=True, model_axis=model_axis
+        )
+    return ServePlan(
+        cfg=cfg,
+        mesh=mesh,
+        rules=rules,
+        max_len=shape_spec.seq_len,
+        batch=shape_spec.global_batch,
+        sp=long_context,
+        cache_rules=cache_rules,
+    )
+
+
+def make_prefill_fn(plan: ServePlan) -> Callable:
+    cfg, ctx = plan.cfg, plan.ctx
+
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, ctx, max_len=plan.max_len)
+
+    if plan.mesh is None:
+        return jax.jit(prefill_step)
+    pshard = plan.param_shardings()
+    tok = logical_sharding(("batch", "seq"), plan.mesh, plan.rules)
+    bshard = {"tokens": tok}
+    if cfg.family == "encdec":
+        bshard["enc_frames"] = logical_sharding(("batch", "seq", None), plan.mesh, plan.rules)
+    if cfg.family == "vlm":
+        bshard["image_embeds"] = logical_sharding(("batch", None, None), plan.mesh, plan.rules)
+    return jax.jit(
+        prefill_step,
+        in_shardings=(pshard, bshard),
+        out_shardings=(None, plan.cache_shardings()),
+    )
+
+
+def make_decode_fn(plan: ServePlan, with_memory: bool = False) -> Callable:
+    """``with_memory``: encdec/vlm decode, which consumes the static cross
+    K/V stack from ``prime_memory`` as an extra input."""
+    cfg, ctx = plan.cfg, plan.ctx
+
+    if with_memory:
+        def decode(params, token, cache, pos, memory):
+            return T.decode_step(
+                params, token, cache, pos, cfg, ctx, memory=memory, sp=plan.sp
+            )
+    else:
+        def decode(params, token, cache, pos):
+            return T.decode_step(params, token, cache, pos, cfg, ctx, sp=plan.sp)
+
+    if plan.mesh is None:
+        return jax.jit(decode, donate_argnums=(2,))
+    pshard = plan.param_shardings()
+    cshard = plan.cache_shardings()
+    tok = logical_sharding(("batch", None), plan.mesh, plan.rules)
+    in_sh = [pshard, tok, cshard, None]
+    if with_memory:
+        mem_sh = logical_sharding(
+            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            plan.mesh, plan.rules,
+        )
+        in_sh.append((mem_sh, mem_sh))
+    return jax.jit(
+        decode,
+        in_shardings=tuple(in_sh),
+        out_shardings=(None, cshard),
+        donate_argnums=(2,),
+    )

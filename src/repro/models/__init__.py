@@ -1,0 +1,21 @@
+"""Model plane: the 10 assigned architectures as one composable stack.
+
+* :mod:`repro.models.config`      — ModelConfig covering all families
+* :mod:`repro.models.init`        — ParamSpec trees + materialization
+* :mod:`repro.models.layers`      — norms, rope, MLP, embeddings
+* :mod:`repro.models.attention`   — GQA/qk-norm/SWA/cross attention
+* :mod:`repro.models.moe`         — router + dispatch + grouped FFN
+* :mod:`repro.models.ssm`         — Mamba-2 (SSD) mixer
+* :mod:`repro.models.transformer` — block assembly, scan, fwd + decode
+* :mod:`repro.models.kvcache`     — serving caches (full/SWA/SSM)
+* :mod:`repro.models.frontends`   — audio/vision stub embeddings
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_params,
+    lm_loss,
+    param_logical,
+)

@@ -1,0 +1,182 @@
+"""One config dataclass spanning all assigned architecture families.
+
+Families:
+  dense  — decoder-only GQA transformer (qwen3, granite, llama3)
+  moe    — dense + mixture-of-experts FFN (mixtral, kimi-k2)
+  ssm    — pure Mamba-2 stack (mamba2-1.3b)
+  hybrid — Jamba-style attn:mamba interleave + periodic MoE (jamba)
+  encdec — encoder-decoder with cross attention (seamless-m4t; audio
+           frontend is a stub producing frame embeddings)
+  vlm    — decoder + periodic cross-attention to image tokens
+           (llama-3.2-vision; patch embeddings stubbed)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig"]
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_period: int = 1  # a layer l is MoE iff l % moe_period == moe_offset
+    moe_offset: int = 0
+    moe_group: int = 1024  # tokens per dispatch group (einsum mode)
+    moe_ep: str = "auto"  # "auto" | "ep" | "tp": expert-parallel vs TP-in-expert
+
+    # --- SSM (Mamba-2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # --- hybrid (Jamba) ------------------------------------------------------
+    attn_period: int = 0  # within each period, position attn_offset is attention
+    attn_offset: int = 4
+
+    # --- encoder-decoder -----------------------------------------------------
+    n_enc_layers: int = 0
+    frontend_frames: int = 0  # stub audio frontend sequence length
+
+    # --- vlm -----------------------------------------------------------------
+    cross_attn_period: int = 0  # one cross-attn layer per period (position 0)
+    num_image_tokens: int = 0
+
+    # --- numerics / execution ------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"  # "none" | "full" | "dots"
+    scan_layers: bool = True
+    vocab_pad_multiple: int = 256
+    attn_impl: str = "auto"
+    moe_impl: str = "auto"
+    ssd_impl: str = "auto"
+    attn_block_q: int = 128
+    attn_block_k: int = 128
+    logit_chunk: int = 0  # 0 = unchunked cross-entropy; >0 = vocab chunking
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm" and self.n_heads % max(self.n_kv_heads, 1):
+            raise ValueError("n_heads must be a multiple of n_kv_heads")
+
+    # -- derived -------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def is_moe_layer(self, layer: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return layer % self.moe_period == self.moe_offset
+
+    def is_attn_layer(self, layer: int) -> bool:
+        """hybrid only: which positions in the period are attention."""
+        if self.family != "hybrid":
+            return True
+        return layer % self.attn_period == self.attn_offset
+
+    # -- parameter counting (for roofline MODEL_FLOPS = 6·N·D) ----------
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytic parameter count (embedding + blocks [+ head])."""
+        d, v = self.d_model, self.padded_vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+
+        def attn_params() -> int:
+            return d * self.n_heads * self.hd * 2 + d * self.n_kv_heads * self.hd * 2
+
+        def mlp_params() -> int:
+            return 3 * d * self.d_ff
+
+        def moe_params(active: bool) -> int:
+            e = self.top_k if active else self.n_experts
+            return 3 * d * self.d_ff * e + d * self.n_experts  # + router
+
+        def mamba_params() -> int:
+            din, g, n, h = self.d_inner, self.ssm_groups, self.ssm_state, self.ssm_heads
+            return (
+                d * din * 2  # w_x, w_z
+                + d * 2 * g * n  # w_BC
+                + d * h  # w_dt
+                + self.ssm_conv * (din + 2 * g * n)  # depthwise conv
+                + 3 * h  # A_log, dt_bias, D
+                + din  # gated norm
+                + din * d  # out_proj
+            )
+
+        n_dec = self.n_layers
+        for l in range(n_dec):
+            if self.family == "ssm":
+                total += mamba_params()
+                continue
+            if self.family == "hybrid":
+                total += attn_params() if self.is_attn_layer(l) else mamba_params()
+            elif self.family == "vlm" and self.cross_attn_period and (
+                l % self.cross_attn_period == 0
+            ):
+                total += 2 * attn_params()  # self + gated cross
+            else:
+                total += attn_params()
+            if self.is_moe_layer(l):
+                total += moe_params(active_only)
+            elif self.d_ff:
+                total += mlp_params()
+        if self.family == "encdec":
+            for _ in range(self.n_enc_layers):
+                total += attn_params() + mlp_params()  # encoder self-attn blocks
+            total += n_dec * attn_params()  # decoder cross-attention
+        return total

@@ -1,0 +1,39 @@
+"""Modality frontend stubs (per the assignment: [audio]/[vlm] entries
+specify the transformer backbone only; the frontend supplies precomputed
+frame/patch embeddings).
+
+``input_specs`` in :mod:`repro.configs.shapes` uses these to size the
+ShapeDtypeStruct stand-ins; the smoke tests and examples use the random
+embedding generators below."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["audio_frames_stub", "image_embeds_stub", "frontend_shapes"]
+
+
+def frontend_shapes(cfg: ModelConfig, batch: int) -> dict:
+    """Extra model inputs (beyond tokens) per family, as shape dicts."""
+    if cfg.family == "encdec":
+        return {"enc_frames": (batch, cfg.frontend_frames, cfg.d_model)}
+    if cfg.family == "vlm":
+        return {"image_embeds": (batch, cfg.num_image_tokens, cfg.d_model)}
+    return {}
+
+
+def audio_frames_stub(key: jax.Array, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """Precomputed speech-frame embeddings (e.g. 50 Hz fbank->conv stack)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.frontend_frames, cfg.d_model), jnp.float32
+    ).astype(cfg.dtype)
+
+
+def image_embeds_stub(key: jax.Array, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """Precomputed ViT patch embeddings (e.g. 560px/14 -> 1601 tokens)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32
+    ).astype(cfg.dtype)

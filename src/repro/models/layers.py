@@ -1,0 +1,156 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, cross-entropy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.init import ParamSpec
+from repro.parallel.sharding import ShardingCtx
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "mlp_specs",
+    "mlp_apply",
+    "embed_specs",
+    "cross_entropy",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in f32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding on the last dim; x (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp"), dtype=cfg.pdtype),
+        "wu": ParamSpec((d, f), ("embed", "mlp"), dtype=cfg.pdtype),
+        "wd": ParamSpec((f, d), ("mlp", "embed"), dtype=cfg.pdtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, ctx: ShardingCtx) -> jax.Array:
+    h_g = x @ p["wg"]
+    h_u = x @ p["wu"]
+    h_g = ctx.constrain(h_g, ("batch", "seq", "act_mlp"))
+    act = (jax.nn.silu(h_g.astype(jnp.float32)) * h_u.astype(jnp.float32)).astype(
+        x.dtype
+    )
+    out = act @ p["wd"]
+    return ctx.constrain(out, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    specs = {
+        "tok": ParamSpec((v, d), ("vocab", "embed"), scale=0.02, init="normal",
+                         dtype=cfg.pdtype),
+        "final_norm": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, v), ("embed", "vocab"), dtype=cfg.pdtype)
+    return specs
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ModelConfig, ctx: ShardingCtx):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.dtype)
+    return ctx.constrain(x, ("batch", "seq", "act_embed"))
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx) -> jax.Array:
+    w = p["head"] if "head" in p else p["tok"].T
+    logits = (x @ w).astype(jnp.float32)
+    return ctx.constrain(logits, ("batch", "seq", "act_vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    """Mean token cross-entropy in f32; labels < 0 or ~valid are masked."""
+    if valid is None:
+        valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), lab[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def chunked_cross_entropy(
+    x: jax.Array,            # (B, S, D) final hidden states
+    w: jax.Array,            # (D, V) unembedding
+    labels: jax.Array,       # (B, S)
+    valid: jax.Array | None,
+    chunk: int,
+) -> jax.Array:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Streams the vocab dim in chunks of ``chunk``: accumulates a running
+    logsumexp and gathers the gold logit on the fly.  Memory-roofline
+    optimization for huge-vocab models (llama3 128k, kimi 160k, seamless
+    256k); see EXPERIMENTS.md §Perf.
+    """
+    if valid is None:
+        valid = labels >= 0
+    b, s, d = x.shape
+    v = w.shape[-1]
+    if v % chunk:
+        raise ValueError(f"vocab {v} not divisible by chunk {chunk}")
+    lab = jnp.maximum(labels, 0)
+
+    def body(carry, i):
+        m, l, gold = carry
+        wi = jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, axis=1)
+        lg = (x @ wi).astype(jnp.float32)  # (B, S, chunk)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(axis=-1)
+        in_chunk = (lab >= i * chunk) & (lab < (i + 1) * chunk)
+        local_idx = (lab - i * chunk).clip(0, chunk - 1)
+        local = jnp.take_along_axis(lg, local_idx[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, local, gold)
+        return (m_new, l, gold), None
+
+    m0 = jnp.full((b, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, s), jnp.float32)
+    g0 = jnp.zeros((b, s), jnp.float32)
+    (m, l, gold), _ = jax.lax.scan(body, (m0, l0, g0), jnp.arange(v // chunk))
+    nll = (m + jnp.log(jnp.maximum(l, 1e-30)) - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

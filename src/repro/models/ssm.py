@@ -1,0 +1,161 @@
+"""Mamba-2 (SSD) mixer block.
+
+Structure (arXiv:2405.21060): in-projections to x (d_inner), z (gate),
+B/C (per-group state projections) and dt (per-head step size); short
+depthwise causal conv on x and B/C; softplus dt; the SSD scan
+(:mod:`repro.kernels.ssd_scan`); gated RMSNorm; out-projection.
+
+The single fused conv over concat([x, B, C]) of the reference CUDA code
+is split into two depthwise convs (x | BC) so the d_inner axis shards
+cleanly over "model" while the small BC channels stay replicated —
+depthwise convs are channelwise, so this is mathematically identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_decode_step
+from repro.models.config import ModelConfig
+from repro.models.init import ParamSpec
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import ShardingCtx
+
+__all__ = ["ssm_specs", "ssm_apply", "ssm_decode", "ssm_cache_shape"]
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    g, n, h, kc = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    bc = 2 * g * n
+    return {
+        "w_x": ParamSpec((d, din), ("embed", "conv_dim"), dtype=cfg.pdtype),
+        "w_z": ParamSpec((d, din), ("embed", "conv_dim"), dtype=cfg.pdtype),
+        "w_bc": ParamSpec((d, bc), ("embed", None), dtype=cfg.pdtype),
+        "w_dt": ParamSpec((d, h), ("embed", "ssm_heads"), dtype=cfg.pdtype),
+        "conv_x": ParamSpec((kc, din), (None, "conv_dim"), dtype=cfg.pdtype),
+        "conv_bc": ParamSpec((kc, bc), (None, None), dtype=cfg.pdtype),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "norm": ParamSpec((din,), ("conv_dim",), init="ones", dtype=jnp.float32),
+        "out": ParamSpec((din, d), ("conv_dim", "embed"), dtype=cfg.pdtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, state=None):
+    """x (B, S, C), w (K, C) — causal depthwise conv via shifted adds.
+
+    K is tiny (4), so K shifted elementwise multiply-adds beat a real conv
+    on TPU.  ``state`` (B, K-1, C) holds the trailing inputs for decode
+    chaining; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(k)
+    )
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad[:, :0]
+    return y, new_state
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int) -> dict:
+    """Decode cache pytree shapes for one layer."""
+    return {
+        "conv_x": (batch, cfg.ssm_conv - 1, cfg.d_inner),
+        "conv_bc": (batch, cfg.ssm_conv - 1, 2 * cfg.ssm_groups * cfg.ssm_state),
+        "state": (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+    }
+
+
+def _projections(p, x, cfg: ModelConfig):
+    xs = x @ p["w_x"]  # (B, S, din)
+    z = x @ p["w_z"]
+    bc = x @ p["w_bc"]  # (B, S, 2GN)
+    dt_raw = x @ p["w_dt"]  # (B, S, H)
+    return xs, z, bc, dt_raw
+
+
+def _postprocess(p, y, z, cfg: ModelConfig, ctx: ShardingCtx, *, decode=False):
+    b = y.shape[0]
+    if decode:
+        y = y.reshape(b, 1, cfg.d_inner)
+    else:
+        y = y.reshape(b, y.shape[1], cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)  # gated
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["out"]
+    return out
+
+
+def ssm_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+    *, return_cache: bool = False,
+):
+    """Full-sequence SSD mixer (training; prefill with ``return_cache``)."""
+    b, s, _ = x.shape
+    g, n, h, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    xs_raw, z, bc_raw, dt_raw = _projections(p, x, cfg)
+    xs_raw = ctx.constrain(xs_raw, ("batch", "seq", "act_mlp"))
+    xs, conv_x_tail = _causal_depthwise_conv(xs_raw, p["conv_x"])
+    bc, conv_bc_tail = _causal_depthwise_conv(bc_raw, p["conv_bc"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    Bm = bc[..., : g * n].reshape(b, s, g, n)
+    Cm = bc[..., g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(b, s, h, pd)
+    chunk = min(cfg.ssm_chunk, s)
+    y, state = ssd_scan(xh, dt, A, Bm, Cm, p["D"], chunk=chunk, impl=cfg.ssd_impl)
+    out = _postprocess(p, y, z, cfg, ctx)
+    if return_cache:
+        cache = {
+            "conv_x": conv_x_tail.astype(cfg.dtype),
+            "conv_bc": conv_bc_tail.astype(cfg.dtype),
+            "state": state,
+        }
+        return out, cache
+    return out
+
+
+def ssm_decode(
+    p: dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+) -> tuple[jax.Array, dict]:
+    """One-token SSD recurrence; O(1) state instead of a KV cache."""
+    b = x.shape[0]
+    g, n, h, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    xs, z, bc, dt_raw = _projections(p, x, cfg)
+    xs, conv_x = _causal_depthwise_conv(xs, p["conv_x"], cache["conv_x"])
+    bc, conv_bc = _causal_depthwise_conv(bc, p["conv_bc"], cache["conv_bc"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    Bm = bc[:, 0, : g * n].reshape(b, g, n)
+    Cm = bc[:, 0, g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+
+    # stored state layout: (B, H, N, P)
+    y, state = ssd_decode_step(
+        xs[:, 0].reshape(b, h, pd), dt, A, Bm, Cm, p["D"],
+        cache["state"].astype(jnp.float32),
+    )
+    new_cache = {
+        "conv_x": conv_x.astype(cache["conv_x"].dtype),
+        "conv_bc": conv_bc.astype(cache["conv_bc"].dtype),
+        "state": state,
+    }
+    out = _postprocess(p, y, z[:, 0][:, None, :] if z.ndim == 2 else z, cfg, ctx, decode=True)
+    return out, new_cache

@@ -1,0 +1,645 @@
+"""Block assembly for all architecture families: specs, forward, decode.
+
+Layer stacking: homogeneous blocks are stacked along a leading "layers"
+axis and iterated with ``jax.lax.scan`` — HLO size stays O(1) in depth
+(critical for 61-layer Kimi lowered at 512 devices).  Heterogeneous
+families scan over *periods*:
+
+* hybrid (Jamba): period of ``attn_period`` (8) positions; position
+  ``attn_offset`` (4) is attention, the rest Mamba; odd positions carry
+  MoE FFNs, even positions dense MLPs (matching Jamba's 1:7 attn:mamba
+  and every-2-layers MoE).
+* vlm (Llama-3.2-Vision): period of ``cross_attn_period`` (5); position 0
+  is a gated cross-attention block into the (stubbed) image tokens.
+* encdec (Seamless): a bidirectional encoder stack over stub audio-frame
+  embeddings, then a decoder stack of (self-attn, cross-attn, MLP).
+
+Three execution modes share the block code: ``train`` (full sequence),
+``prefill`` (full sequence, emits the serving cache), ``decode`` (one
+token, consumes/updates the cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.init import ParamSpec, abstract_tree, logical_tree, materialize
+from repro.models.layers import (
+    chunked_cross_entropy,
+    cross_entropy,
+    embed_specs,
+    embed_tokens,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+    unembed,
+)
+from repro.parallel.sharding import ShardingCtx
+
+__all__ = [
+    "param_specs",
+    "param_logical",
+    "init_params",
+    "abstract_params",
+    "forward",
+    "lm_loss",
+    "decode_step",
+    "init_cache",
+    "prefill",
+]
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def _norm_spec(cfg):
+    return ParamSpec((cfg.d_model,), (None,), init="ones", dtype=jnp.float32)
+
+
+def _attn_block_specs(cfg: ModelConfig, moe: bool, cross: bool = False) -> dict:
+    specs = {
+        "ln1": _norm_spec(cfg),
+        "attn": attn.attn_specs(cfg, cross=cross),
+    }
+    if cfg.d_ff or moe:
+        specs["ln2"] = _norm_spec(cfg)
+        specs["ffn"] = moe_mod.moe_specs(cfg) if moe else mlp_specs(cfg)
+    return specs
+
+
+def _mamba_block_specs(cfg: ModelConfig, ffn: str | None = None) -> dict:
+    specs = {"ln1": _norm_spec(cfg), "mamba": ssm_mod.ssm_specs(cfg)}
+    if ffn == "mlp":
+        specs["ln2"] = _norm_spec(cfg)
+        specs["ffn"] = mlp_specs(cfg)
+    elif ffn == "moe":
+        specs["ln2"] = _norm_spec(cfg)
+        specs["ffn"] = moe_mod.moe_specs(cfg)
+    return specs
+
+
+def _stack_specs(spec: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked leading dim to every ParamSpec leaf."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), (axis_name, *s.logical), s.init, s.scale, s.dtype),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _period_structure(cfg: ModelConfig) -> list[tuple[str, str | None]]:
+    """For period-scanned families: list of (mixer, ffn) per position."""
+    if cfg.family == "hybrid":
+        out = []
+        for pos in range(cfg.attn_period):
+            mixer = "attn" if pos == cfg.attn_offset else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(pos) else "mlp"
+            out.append((mixer, ffn))
+        return out
+    if cfg.family == "vlm":
+        out = [("cross", "mlp")]
+        out += [("attn", "mlp")] * (cfg.cross_attn_period - 1)
+        return out
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs: dict = {"embed": embed_specs(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        block = _attn_block_specs(cfg, moe=cfg.n_experts > 0)
+        specs["layers"] = _stack_specs(block, cfg.n_layers)
+    elif fam == "ssm":
+        specs["layers"] = _stack_specs(_mamba_block_specs(cfg), cfg.n_layers)
+    elif fam in ("hybrid", "vlm"):
+        period = _period_structure(cfg)
+        n_periods = cfg.n_layers // len(period)
+        if cfg.n_layers % len(period):
+            raise ValueError(f"{cfg.n_layers} layers not divisible by period {len(period)}")
+        pos_specs = {}
+        for i, (mixer, ffn) in enumerate(period):
+            if mixer == "mamba":
+                blk = _mamba_block_specs(cfg, ffn)
+            elif mixer == "cross":
+                blk = _attn_block_specs(cfg, moe=False, cross=True)
+            else:
+                blk = _attn_block_specs(cfg, moe=(ffn == "moe"))
+            pos_specs[f"pos{i}"] = blk
+        specs["periods"] = _stack_specs(pos_specs, n_periods, "periods")
+    elif fam == "encdec":
+        enc_block = _attn_block_specs(cfg, moe=False)
+        dec_block = _attn_block_specs(cfg, moe=False)
+        dec_block["ln_x"] = _norm_spec(cfg)
+        dec_block["xattn"] = attn.attn_specs(cfg)
+        specs["enc_layers"] = _stack_specs(enc_block, cfg.n_enc_layers)
+        specs["layers"] = _stack_specs(dec_block, cfg.n_layers)
+        specs["enc_norm"] = _norm_spec(cfg)
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+def param_logical(cfg: ModelConfig):
+    return logical_tree(param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return materialize(param_specs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks (mode: train | prefill | decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    mixer: str,
+    mode: str,
+    cache: dict | None,
+    pos: jax.Array | None,
+    positions: jax.Array | None,
+    memory: tuple | None,
+    window: int | None,
+    causal: bool,
+    sp: bool = False,
+):
+    """Dispatch one mixer; returns (out, new_cache_entry)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        if mode == "decode":
+            out, k_c, v_c = attn.attn_decode(
+                p["attn"], h, cache["k"], cache["v"], pos, cfg, ctx,
+                ring=cfg.sliding_window is not None, sp=sp,
+            )
+            new_cache = dict(cache, k=k_c, v=v_c)
+            return out, new_cache
+        out = attn.attn_apply(
+            p["attn"], h, cfg, ctx, positions, causal=causal, window=window
+        )
+        if mode == "prefill":
+            k, v = attn._project_kv(p["attn"], h, cfg, ctx, positions)
+            return out, {"k": k, "v": v}
+        return out, None
+    if mixer == "mamba":
+        if mode == "decode":
+            out, new_cache = ssm_mod.ssm_decode(p["mamba"], h, cache, cfg, ctx)
+            return out, new_cache
+        if mode == "prefill":
+            return ssm_mod.ssm_apply(p["mamba"], h, cfg, ctx, return_cache=True)
+        return ssm_mod.ssm_apply(p["mamba"], h, cfg, ctx), None
+    if mixer == "cross":
+        out = attn.cross_attn_apply(p["attn"], h, memory, cfg, ctx, gated=True)
+        return out, cache
+    raise ValueError(mixer)
+
+
+def _apply_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx, kind: str | None):
+    """Returns (out, aux)."""
+    if "ffn" not in p or kind is None:
+        return jnp.zeros_like(x), 0.0
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        return moe_mod.moe_apply(p["ffn"], h, cfg, ctx)
+    return mlp_apply(p["ffn"], h, ctx), 0.0
+
+
+def _block(
+    p, x, cfg, ctx, *, mixer, ffn_kind, mode, cache=None, pos=None,
+    positions=None, memory=None, window=None, causal=True, sp=False,
+):
+    mix_out, new_cache = _apply_mixer(
+        p, x, cfg, ctx, mixer, mode, cache, pos, positions, memory, window,
+        causal, sp,
+    )
+    x = x + mix_out
+    ffn_out, aux = _apply_ffn(p, x, cfg, ctx, ffn_kind)
+    x = x + ffn_out
+    return x, new_cache, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _uniform_kind(cfg: ModelConfig) -> tuple[str, str | None]:
+    if cfg.family == "ssm":
+        return "mamba", None
+    ffn = "moe" if cfg.n_experts > 0 else ("mlp" if cfg.d_ff else None)
+    return "attn", ffn
+
+
+def scan_maybe(scan_fn, init, xs, cfg: ModelConfig):
+    """lax.scan, or an unrolled python loop when ``cfg.scan_layers`` is off
+    (used by tests and by the dry-run's depth-extrapolation compiles —
+    XLA's cost analysis counts a while body once, so per-layer costs are
+    measured on small unrolled programs and extrapolated)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(scan_fn, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = scan_fn(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = (
+        jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        if ys and ys[0] is not None
+        else None
+    )
+    return carry, stacked
+
+
+def _scan_blocks(body, x, stacked_params, cfg: ModelConfig, caches=None):
+    """Scan body over stacked layer params (+ caches); accumulates aux."""
+    def scan_fn(carry, xs):
+        x, aux = carry
+        lp, cache = xs if caches is not None else (xs, None)
+        x, new_cache, aux_l = body(x, lp, cache)
+        return (x, aux + aux_l), new_cache
+
+    xs = (stacked_params, caches) if caches is not None else stacked_params
+    (x, aux), new_caches = scan_maybe(scan_fn, (x, 0.0), xs, cfg)
+    return x, aux, new_caches
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, ctx: ShardingCtx):
+    """Encoder stack over stub frame embeddings (encdec family)."""
+    x = ctx.constrain(frames.astype(cfg.dtype), ("batch", "seq", "act_embed"))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, lp, _):
+        return _block(
+            lp, x, cfg, ctx, mixer="attn", ffn_kind="mlp", mode="train",
+            positions=positions, causal=False,
+        )
+
+    body = _maybe_remat(body, cfg)
+    x, _, _ = _scan_blocks(body, x, params["enc_layers"], cfg)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    *,
+    mode: str = "train",
+) -> tuple[jax.Array, jax.Array, Any]:
+    """Full-sequence forward.
+
+    batch: tokens (B, S) [+ enc_frames (B,Se,D) | image_embeds (B,Si,D)].
+    Returns (hidden (B,S,D), aux_loss, caches_or_None).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg, ctx)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "ssm"):
+        mixer, ffn_kind = _uniform_kind(cfg)
+
+        def body(x, lp, cache):
+            return _block(
+                lp, x, cfg, ctx, mixer=mixer, ffn_kind=ffn_kind, mode=mode,
+                positions=positions, window=cfg.sliding_window, cache=cache,
+            )
+
+        body_r = _maybe_remat(body, cfg)
+        x, aux, caches = _scan_blocks(body_r, x, params["layers"], cfg)
+
+    elif fam in ("hybrid", "vlm"):
+        period = _period_structure(cfg)
+        memory = None
+        if fam == "vlm":
+            img = batch["image_embeds"].astype(cfg.dtype)
+            # per-period cross K/V are projected inside the block from raw
+            # image embeddings (each period has its own projections)
+            memory_raw = ctx.constrain(img, ("batch", "kv_seq", "act_embed"))
+
+        def body(x, period_params, cache):
+            aux = 0.0
+            new_caches = {}
+            for i, (mixer, ffn_kind) in enumerate(period):
+                p_i = period_params[f"pos{i}"]
+                mem = None
+                if mixer == "cross":
+                    mem = attn.memory_kv(p_i["attn"], memory_raw, cfg, ctx)
+                x, c_i, aux_i = _block(
+                    p_i, x, cfg, ctx, mixer=mixer, ffn_kind=ffn_kind, mode=mode,
+                    positions=positions, memory=mem, window=cfg.sliding_window,
+                )
+                if mode == "prefill":
+                    new_caches[f"pos{i}"] = (
+                        c_i if c_i is not None else {"unused": jnp.zeros((1,), cfg.dtype)}
+                    )
+                aux = aux + aux_i
+            return x, new_caches if mode == "prefill" else None, aux
+
+        body_r = _maybe_remat(body, cfg)
+        x, aux, caches = _scan_blocks(body_r, x, params["periods"], cfg)
+
+    elif fam == "encdec":
+        enc = encode(params, batch["enc_frames"], cfg, ctx)
+
+        def body(x, lp, cache):
+            x, c, aux = _block(
+                lp, x, cfg, ctx, mixer="attn", ffn_kind=None, mode=mode,
+                positions=positions, cache=cache,
+            )
+            # cross attention sublayer
+            mem = attn.memory_kv(lp["xattn"], enc, cfg, ctx)
+            h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+            x = x + attn.cross_attn_apply(lp["xattn"], h, mem, cfg, ctx)
+            ffn_out, aux2 = _apply_ffn(lp, x, cfg, ctx, "mlp")
+            x = x + ffn_out
+            return x, c, aux + aux2
+
+        body_r = _maybe_remat(body, cfg)
+        x, aux, caches = _scan_blocks(body_r, x, params["layers"], cfg)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+    return x, aux, caches
+
+
+def lm_loss(
+    params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx
+) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE aux).  batch: tokens, labels."""
+    x, aux, _ = forward(params, batch, cfg, ctx, mode="train")
+    labels = batch["labels"]
+    if cfg.logit_chunk:
+        w = params["embed"].get("head")
+        if w is None:
+            w = params["embed"]["tok"].T
+        ce = chunked_cross_entropy(x, w, labels, None, cfg.logit_chunk)
+    else:
+        logits = unembed(params["embed"], x, cfg, ctx)
+        ce = cross_entropy(logits, labels)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode step
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache(cfg: ModelConfig, batch: int, max_len: int):
+    window = cfg.sliding_window
+    s = min(max_len, window) if window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def _ssm_cache(cfg: ModelConfig, batch: int):
+    shapes = ssm_mod.ssm_cache_shape(cfg, batch)
+    return {
+        "conv_x": jnp.zeros(shapes["conv_x"], cfg.dtype),
+        "conv_bc": jnp.zeros(shapes["conv_bc"], cfg.dtype),
+        "state": jnp.zeros(shapes["state"], jnp.float32),
+    }
+
+
+def _stack_cache(cache: dict, n: int):
+    return jax.tree.map(lambda a: jnp.tile(a, (n,) + (1,) * a.ndim), cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Zeroed serving cache for ``decode_step`` (static shapes)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "encdec"):
+        return {"layers": _stack_cache(_attn_cache(cfg, batch, max_len), cfg.n_layers)}
+    if fam == "ssm":
+        return {"layers": _stack_cache(_ssm_cache(cfg, batch), cfg.n_layers)}
+    if fam in ("hybrid", "vlm"):
+        period = _period_structure(cfg)
+        n_periods = cfg.n_layers // len(period)
+        per = {}
+        for i, (mixer, _) in enumerate(period):
+            if mixer == "mamba":
+                per[f"pos{i}"] = _ssm_cache(cfg, batch)
+            elif mixer == "cross":  # static memory, no rolling state
+                per[f"pos{i}"] = {"unused": jnp.zeros((1,), cfg.dtype)}
+            else:
+                per[f"pos{i}"] = _attn_cache(cfg, batch, max_len)
+        return {"periods": _stack_cache(per, n_periods)}
+    raise ValueError(fam)
+
+
+_ATTN_CACHE_LOGICAL = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+}
+_SSM_CACHE_LOGICAL = {
+    "conv_x": ("layers", "batch", None, "conv_dim"),
+    "conv_bc": ("layers", "batch", None, None),
+    "state": ("layers", "batch", "ssm_heads", "ssm_state", None),
+}
+
+
+def cache_logical(cfg: ModelConfig) -> dict:
+    """Logical sharding axes for the ``init_cache`` pytree."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "encdec"):
+        return {"layers": dict(_ATTN_CACHE_LOGICAL)}
+    if fam == "ssm":
+        return {"layers": dict(_SSM_CACHE_LOGICAL)}
+    if fam in ("hybrid", "vlm"):
+        period = _period_structure(cfg)
+        per = {}
+        for i, (mixer, _) in enumerate(period):
+            if mixer == "mamba":
+                per[f"pos{i}"] = dict(_SSM_CACHE_LOGICAL)
+            elif mixer == "cross":
+                per[f"pos{i}"] = {"unused": ("layers", None)}
+            else:
+                per[f"pos{i}"] = dict(_ATTN_CACHE_LOGICAL)
+        return {"periods": per}
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct cache (dry-run stand-in, no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prime_memory(params, cfg: ModelConfig, ctx: ShardingCtx, batch: dict):
+    """Precompute static cross-attention memory K/V for encdec/vlm decode."""
+    if cfg.family == "encdec":
+        enc = encode(params, batch["enc_frames"], cfg, ctx)
+
+        def per_layer(lp):
+            return attn.memory_kv(lp["xattn"], enc, cfg, ctx)
+
+        return jax.vmap(per_layer)(params["layers"])
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.dtype)
+
+        def per_period(pp):
+            return attn.memory_kv(pp["pos0"]["attn"], img, cfg, ctx)
+
+        return jax.vmap(per_period)(params["periods"])
+    return None
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,  # (B, 1) int32
+    cache: dict,
+    pos: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    memory: Any = None,  # stacked cross K/V from prime_memory
+    sp: bool = False,  # sequence-parallel KV cache (long-context decode)
+) -> tuple[jax.Array, dict]:
+    """One serving step: logits for the next token + updated cache."""
+    x = embed_tokens(params["embed"], token, cfg, ctx)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "ssm"):
+        mixer, ffn_kind = _uniform_kind(cfg)
+
+        def body(x, lp, c):
+            return _block(
+                lp, x, cfg, ctx, mixer=mixer, ffn_kind=ffn_kind, mode="decode",
+                cache=c, pos=pos, window=cfg.sliding_window, sp=sp,
+            )
+
+        x, _, new_caches = _scan_blocks(body, x, params["layers"], cfg,
+                                        caches=cache["layers"])
+        new_cache = {"layers": new_caches}
+
+    elif fam in ("hybrid", "vlm"):
+        period = _period_structure(cfg)
+
+        def body(x, xs, _):
+            if memory is not None:
+                pp, pc, mem_p = xs
+            else:
+                pp, pc = xs
+                mem_p = None
+            new_pc = {}
+            for i, (mixer, ffn_kind) in enumerate(period):
+                p_i, c_i = pp[f"pos{i}"], pc[f"pos{i}"]
+                if mixer == "cross":
+                    h = rms_norm(x, p_i["ln1"], cfg.norm_eps)
+                    out = attn.cross_attn_apply(p_i["attn"], h, mem_p, cfg, ctx, gated=True)
+                    x = x + out
+                    ffn_out, _ = _apply_ffn(p_i, x, cfg, ctx, ffn_kind)
+                    x = x + ffn_out
+                    new_pc[f"pos{i}"] = c_i
+                else:
+                    x, c_new, _ = _block(
+                        p_i, x, cfg, ctx, mixer=mixer, ffn_kind=ffn_kind,
+                        mode="decode", cache=c_i, pos=pos,
+                        window=cfg.sliding_window, sp=sp,
+                    )
+                    new_pc[f"pos{i}"] = c_new
+            return x, new_pc, 0.0
+
+        def scan_fn(carry, xs):
+            x, c, _ = body(carry, xs, None)
+            return x, c
+
+        xs = (params["periods"], cache["periods"])
+        if memory is not None:
+            xs = (*xs, memory)
+        x, new_pcs = scan_maybe(scan_fn, x, xs, cfg)
+        new_cache = {"periods": new_pcs}
+
+    elif fam == "encdec":
+        def scan_fn(x, xs):
+            lp, c, mem = xs
+            x, c_new, _ = _block(
+                lp, x, cfg, ctx, mixer="attn", ffn_kind=None, mode="decode",
+                cache=c, pos=pos,
+            )
+            h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+            x = x + attn.cross_attn_apply(lp["xattn"], h, mem, cfg, ctx)
+            ffn_out, _ = _apply_ffn(lp, x, cfg, ctx, "mlp")
+            x = x + ffn_out
+            return x, c_new
+
+        x, new_caches = scan_maybe(
+            scan_fn, x, (params["layers"], cache["layers"], memory), cfg
+        )
+        new_cache = {"layers": new_caches}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, ctx)
+    return logits, new_cache
+
+
+def prefill(
+    params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx, max_len: int
+) -> tuple[jax.Array, dict]:
+    """Run the prompt through the model and build the decode cache.
+
+    Uniform across families: attention layers emit padded (ring-layout for
+    SWA) KV buffers; Mamba layers emit their O(1) conv/SSD state.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x, _, caches = forward(params, batch, cfg, ctx, mode="prefill")
+    x = rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, ctx)
+
+    def pad_kv(kv):
+        k, v = kv["k"], kv["v"]  # (L, B, S, Hkv, hd)
+        window = cfg.sliding_window
+        target = min(max_len, window) if window else max_len
+        if s >= target:  # keep the trailing window, in ring layout
+            k, v = k[:, :, s - target :], v[:, :, s - target :]
+            if window:  # token t must sit at slot t % target
+                shift = (s - target) % target
+                k = jnp.roll(k, shift, axis=2)
+                v = jnp.roll(v, shift, axis=2)
+        else:
+            pad = [(0, 0), (0, 0), (0, target - s), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
+    def fix(cache):
+        if isinstance(cache, dict) and "k" in cache:
+            return pad_kv(cache)
+        if isinstance(cache, dict):
+            return {key: fix(val) for key, val in cache.items()}
+        return cache
+
+    key = "periods" if cfg.family in ("hybrid", "vlm") else "layers"
+    return logits, {key: fix(caches)}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptState, adafactor_init, adamw_init, apply_updates  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,10 @@
+"""Distribution plane: logical-axis sharding rules over the production mesh."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    LONG_CONTEXT_RULES,
+    logical_sharding,
+    shard_pytree_spec,
+    with_logical_constraint,
+)

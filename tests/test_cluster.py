@@ -1,0 +1,98 @@
+"""Cluster-manager tests: DES parity, fault tolerance, stragglers, elasticity,
+and the end-to-end integration with real (tiny) training jobs."""
+
+import numpy as np
+import pytest
+
+from repro.cluster.faults import FaultConfig
+from repro.cluster.manager import ClusterManager, TrainingJob
+from repro.core.jobs import JobSpec, generate_workload
+from repro.core.simulator import simulate
+
+
+def _workload(n=100, seed=0, servers_window=50.0):
+    rng = np.random.default_rng(seed)
+    return generate_workload(
+        rng, n, num_stages=3, workload_set=1,
+        arrivals=np.sort(rng.uniform(0, servers_window, n)),
+    )
+
+
+@pytest.mark.parametrize("policy", ["rank", "serpt", "sr", "fifo"])
+def test_manager_matches_des_without_faults(policy):
+    spec = _workload()
+    tj = [TrainingJob(spec=s) for s in spec]
+    res = ClusterManager(tj, 8, policy=policy, rng=np.random.default_rng(1)).run()
+    ref = simulate(spec, 8, policy=policy, rng=np.random.default_rng(1))
+    assert res.mean_sojourn_successful == pytest.approx(ref.mean_sojourn_successful)
+    assert res.n_success == ref.n_success
+
+
+def test_failures_delay_but_never_lose_jobs():
+    spec = _workload(80, seed=2)
+    mk = lambda: [TrainingJob(spec=s) for s in spec]
+    base = ClusterManager(mk(), 8, rng=np.random.default_rng(3)).run()
+    faulty = ClusterManager(
+        mk(), 8, rng=np.random.default_rng(3),
+        fault_cfg=FaultConfig(mtbf_hours=0.005, restart_overhead=0.2,
+                              straggler_prob=0.0),
+        nodes_per_server=8,
+    ).run()
+    assert faulty.n_jobs == base.n_jobs
+    assert faulty.restarts > 0
+    assert faulty.n_success == base.n_success  # failures never terminate jobs
+    assert faulty.mean_sojourn_successful >= base.mean_sojourn_successful
+
+
+def test_straggler_mitigation_counts_and_bounds():
+    spec = _workload(60, seed=4)
+    tj = [TrainingJob(spec=s) for s in spec]
+    res = ClusterManager(
+        tj, 4, rng=np.random.default_rng(5),
+        fault_cfg=FaultConfig(mtbf_hours=1e9, straggler_prob=0.3,
+                              straggler_slowdown=10.0, deadline_factor=2.0),
+    ).run()
+    assert res.straggler_redispatches > 0
+    assert res.n_success > 0
+
+
+def test_elastic_resize_grow_and_shrink():
+    spec = _workload(120, seed=6)
+    mk = lambda: [TrainingJob(spec=s) for s in spec]
+    small = ClusterManager(mk(), 4, rng=np.random.default_rng(7)).run()
+    grown = ClusterManager(
+        mk(), 4, rng=np.random.default_rng(7),
+        resize_events=[(5.0, 16)],
+    ).run()
+    assert grown.makespan < small.makespan  # adding servers helps
+    shrunk = ClusterManager(
+        mk(), 16, rng=np.random.default_rng(7),
+        resize_events=[(5.0, 2)],
+    ).run()
+    assert shrunk.n_success == small.n_success  # drain loses nothing
+
+
+def test_rank_beats_fifo_on_successful_sojourn():
+    spec = _workload(300, seed=8, servers_window=20.0)
+    mk = lambda: [TrainingJob(spec=s) for s in spec]
+    rank = ClusterManager(mk(), 4, policy="rank", rng=np.random.default_rng(9)).run()
+    fifo = ClusterManager(mk(), 4, policy="fifo", rng=np.random.default_rng(9)).run()
+    assert rank.mean_sojourn_successful < fifo.mean_sojourn_successful
+
+
+def test_real_runner_integration():
+    """Stages actually execute (here: a metric-gated callback), and a gate
+    can terminate a job early regardless of its sampled outcome."""
+    spec = JobSpec(sizes=np.array([1.0, 2.0, 3.0]), probs=np.array([0.1, 0.1, 0.8]))
+    calls = []
+
+    def runner(job, stage):
+        calls.append((job.name, stage))
+        terminated = stage == 1  # gate kills at the 2nd checkpoint
+        return 0.5, terminated
+
+    tj = [TrainingJob(spec=spec, runner=runner, name=f"j{i}") for i in range(3)]
+    res = ClusterManager(tj, 2, rng=np.random.default_rng(0)).run()
+    assert res.n_jobs == 3
+    assert res.n_success == 0  # every job gated at stage 1 (< last stage 2)
+    assert all(stage <= 1 for _, stage in calls)

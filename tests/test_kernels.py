@@ -1,0 +1,269 @@
+"""Kernel allclose sweeps vs the pure-jnp oracles + hypothesis properties.
+
+All Pallas kernels run in ``interpret=True`` on CPU (the TPU target is
+exercised structurally: same BlockSpecs, same grid)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import ref_attention
+from repro.kernels.moe_gemm.ops import moe_ffn
+from repro.kernels.moe_gemm.ref import moe_ffn_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_decode_step, ssd_quadratic
+
+
+def _rand(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(scale * rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, sq, hq, hkv, d, causal, window, dtype)
+    (2, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 4, 4, 128, False, None, jnp.float32),
+    (2, 512, 8, 2, 64, True, 128, jnp.float32),
+    (1, 128, 2, 1, 64, True, 64, jnp.float32),
+    (1, 256, 4, 2, 64, True, None, jnp.bfloat16),
+    (2, 384, 6, 2, 64, True, 256, jnp.float32),  # non-pow2 seq (3 blocks)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_fwd(case):
+    b, s, hq, hkv, d, causal, window, dtype = case
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (b, s, hq, d), dtype)
+    k = _rand(rng, (b, s, hkv, d), dtype)
+    v = _rand(rng, (b, s, hkv, d), dtype)
+    o_ref = ref_attention(q, k, v, causal=causal, window=window)
+    o_pal = flash_attention(q, k, v, causal=causal, window=window, impl="interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o_pal, np.float32), np.asarray(o_ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("case", FLASH_CASES[:4])
+def test_flash_attention_bwd(case):
+    b, s, hq, hkv, d, causal, window, _ = case
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (b, s, hq, d))
+    k = _rand(rng, (b, s, hkv, d))
+    v = _rand(rng, (b, s, hkv, d))
+
+    def f(impl):
+        return lambda q, k, v: (
+            flash_attention(q, k, v, causal=causal, window=window, impl=impl) ** 2
+        ).sum()
+
+    g_ref = jax.grad(f("xla"), argnums=(0, 1, 2))(q, k, v)
+    g_pal = jax.grad(f("interpret"), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-4, rtol=1e-3)
+
+
+def test_flash_attention_is_causal():
+    """Output at position t must not depend on tokens after t."""
+    rng = np.random.default_rng(2)
+    b, s, h, d = 1, 256, 2, 64
+    q, k, v = (_rand(rng, (b, s, h, d)) for _ in range(3))
+    o1 = flash_attention(q, k, v, causal=True, impl="interpret")
+    k2 = k.at[:, s // 2 :].set(99.0)
+    v2 = v.at[:, s // 2 :].set(-99.0)
+    o2 = flash_attention(q, k2, v2, causal=True, impl="interpret")
+    np.testing.assert_allclose(
+        np.asarray(o1[:, : s // 2]), np.asarray(o2[:, : s // 2]), atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.sampled_from([128, 256]),
+    hq=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    window=st.sampled_from([None, 64]),
+)
+def test_flash_attention_property(s, hq, g, window):
+    rng = np.random.default_rng(abs(hash((s, hq, g, window))) % 2**32)
+    hkv = max(hq // g, 1)
+    q = _rand(rng, (1, s, hq, 64))
+    k = _rand(rng, (1, s, hkv, 64))
+    v = _rand(rng, (1, s, hkv, 64))
+    o_ref = ref_attention(q, k, v, causal=True, window=window)
+    o_pal = flash_attention(q, k, v, causal=True, window=window, impl="interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, s, h, p, g, n, chunk)
+    (2, 256, 4, 64, 2, 32, 64),
+    (1, 128, 2, 32, 1, 16, 32),
+    (1, 512, 8, 64, 1, 64, 128),
+    (2, 64, 4, 16, 4, 8, 16),
+]
+
+
+def _ssd_inputs(rng, b, s, h, p, g, n):
+    x = _rand(rng, (b, s, h, p))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    Bm = _rand(rng, (b, s, g, n))
+    Cm = _rand(rng, (b, s, g, n))
+    D = _rand(rng, (h,))
+    return x, dt, A, Bm, Cm, D
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_vs_quadratic_oracle(case):
+    b, s, h, p, g, n, chunk = case
+    rng = np.random.default_rng(3)
+    args = _ssd_inputs(rng, b, s, h, p, g, n)
+    yq, stq = ssd_quadratic(*args)
+    yc, stc = ssd_chunked(*args, chunk=chunk)
+    yp, stp = ssd_scan(*args, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yq), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yq), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(stp), np.asarray(stq), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_state_chaining_equals_full():
+    """Sequence-parallel correctness: scan(A;B) == scan(A) then scan(B|state)."""
+    rng = np.random.default_rng(4)
+    x, dt, A, Bm, Cm, D = _ssd_inputs(rng, 2, 256, 4, 32, 1, 16)
+    y_full, st_full = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=64)
+    h = 128
+    yA, stA = ssd_chunked(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], D, chunk=64)
+    yB, stB = ssd_chunked(
+        x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:], D, init_state=stA, chunk=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([yA, yB], 1)), np.asarray(y_full), atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(stB), np.asarray(st_full), atol=1e-5)
+
+
+def test_ssd_decode_step_matches_scan():
+    rng = np.random.default_rng(5)
+    b, s, h, p, g, n = 2, 16, 4, 32, 1, 16
+    x, dt, A, Bm, Cm, D = _ssd_inputs(rng, b, s, h, p, g, n)
+    y_ref, st_ref = ssd_quadratic(x, dt, A, Bm, Cm, D)
+    st = jnp.zeros((b, h, n, p))
+    for t in range(s):
+        yt, st = ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D, st)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(y_ref[:, -1]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128]),
+    chunk=st.sampled_from([16, 32, 64]),
+    h=st.sampled_from([2, 4]),
+)
+def test_ssd_chunk_invariance(s, chunk, h):
+    """Output must be independent of the chunking."""
+    rng = np.random.default_rng(abs(hash((s, chunk, h))) % 2**32)
+    args = _ssd_inputs(rng, 1, s, h, 16, 1, 8)
+    y1, st1 = ssd_chunked(*args, chunk=chunk)
+    y2, st2 = ssd_chunked(*args, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_bwd_matches_chunked_ad():
+    rng = np.random.default_rng(6)
+    args = _ssd_inputs(rng, 1, 128, 2, 32, 1, 16)
+
+    def f_pal(*a):
+        return (ssd_scan(*a, chunk=32, impl="interpret")[0] ** 2).sum()
+
+    def f_ref(*a):
+        return (ssd_chunked(*a, chunk=32)[0] ** 2).sum()
+
+    g1 = jax.grad(f_pal, argnums=(0, 1, 3, 4))(*args)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 3, 4))(*args)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped GEMM
+# ---------------------------------------------------------------------------
+
+MOE_CASES = [
+    (4, 256, 128, 512),
+    (8, 128, 64, 256),
+    (2, 512, 256, 128),
+    (16, 64, 128, 128),
+]
+
+
+@pytest.mark.parametrize("case", MOE_CASES)
+def test_moe_ffn_fwd(case):
+    e, c, dm, df = case
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (e, c, dm), scale=0.1)
+    wg = _rand(rng, (e, dm, df), scale=0.05)
+    wu = _rand(rng, (e, dm, df), scale=0.05)
+    wd = _rand(rng, (e, df, dm), scale=0.05)
+    o_ref = moe_ffn_ref(x, wg, wu, wd)
+    o_pal = moe_ffn(x, wg, wu, wd, impl="interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), atol=1e-5, rtol=1e-4)
+
+
+def test_moe_ffn_bwd():
+    rng = np.random.default_rng(8)
+    e, c, dm, df = 4, 128, 64, 256
+    x = _rand(rng, (e, c, dm), scale=0.1)
+    wg = _rand(rng, (e, dm, df), scale=0.05)
+    wu = _rand(rng, (e, dm, df), scale=0.05)
+    wd = _rand(rng, (e, df, dm), scale=0.05)
+    g1 = jax.grad(lambda *a: (moe_ffn(*a, impl="interpret") ** 2).sum(), argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    g2 = jax.grad(lambda *a: (moe_ffn_ref(*a) ** 2).sum(), argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-5)
+
+
+def test_moe_router_no_drops_is_exact():
+    """With generous capacity, einsum-dispatched MoE == dense per-token mix."""
+    from repro.models.config import ModelConfig
+    from repro.models.moe import moe_apply, moe_specs
+    from repro.models.init import materialize
+    from repro.parallel.sharding import ShardingCtx
+
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+        d_ff=64, vocab_size=64, n_experts=4, top_k=2, capacity_factor=16.0,
+        moe_impl="xla", param_dtype="float32", compute_dtype="float32",
+    )
+    params = materialize(moe_specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (2, 8, 32), scale=0.3)
+    out, aux = moe_apply(params, x, cfg, ShardingCtx.none())
+
+    # dense reference: softmax-top2 gates, all experts computed
+    logits = x.reshape(-1, 32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, ci = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = np.zeros((16, 32), np.float32)
+    xt = np.asarray(x.reshape(-1, 32))
+    for tkn in range(16):
+        for j in range(2):
+            e = int(ci[tkn, j])
+            h = jax.nn.silu(xt[tkn] @ params["wg"][e]) * (xt[tkn] @ params["wu"][e])
+            ref[tkn] += float(gv[tkn, j]) * np.asarray(h @ params["wd"][e])
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 32)), ref, atol=1e-4, rtol=1e-3)
+    assert float(aux) > 0

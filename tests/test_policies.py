@@ -1,0 +1,73 @@
+"""Paper Section III-A worked example + policy index correctness."""
+
+import numpy as np
+import pytest
+
+from repro.core import evaluator, policies
+from repro.core.jobs import JobSpec, generate_workload
+
+
+@pytest.fixture
+def paper_jobs():
+    # N=2 example from Section III-A.
+    return [
+        JobSpec(sizes=[1, 10], probs=[0.25, 0.75], job_id=0),
+        JobSpec(sizes=[3, 6], probs=[0.6, 0.4], job_id=1),
+    ]
+
+
+def test_paper_worked_example_indices(paper_jobs):
+    # r(1) = min(4, 7.75) = 4,  r(2) = min(5, 4.2) = 4.2  (Eq. 2)
+    sr = policies.sr_rank_values(paper_jobs)
+    np.testing.assert_allclose(sr, [4.0, 4.2])
+    # ERPT(1)=7.75, ERPT(2)=4.2
+    np.testing.assert_allclose(policies.erpt_values(paper_jobs), [7.75, 4.2])
+    # After job 1 survives stage 1, its SR rank becomes 9 (paper text).
+    table = policies.sr_index_table(paper_jobs)
+    assert table[0, 1] == pytest.approx(9.0)
+
+
+def test_paper_worked_example_sojourn(paper_jobs):
+    # E_SR = 10, E_SERPT = 9.75, E_OPTIMAL = 9.1 (paper Section III-A)
+    assert evaluator.expected_sojourn_dynamic(paper_jobs, "sr") == pytest.approx(10.0, rel=1e-5)
+    assert evaluator.expected_sojourn_dynamic(paper_jobs, "serpt") == pytest.approx(9.75, rel=1e-5)
+    order, e_opt = evaluator.optimal_order(paper_jobs)
+    assert e_opt == pytest.approx(9.1, rel=1e-5)
+    assert list(order) == [0, 1]  # both stages of job 1 before job 2
+    # RANK achieves the optimum on this instance.
+    assert evaluator.evaluate(paper_jobs, "rank") == pytest.approx(9.1, rel=1e-5)
+
+
+def test_rank_values_eq23(paper_jobs):
+    # R(i) = E[size]/p_success
+    np.testing.assert_allclose(
+        policies.rank_values(paper_jobs), [7.75 / 0.75, 4.2 / 0.4]
+    )
+
+
+def test_rank_order_scale_invariance():
+    rng = np.random.default_rng(0)
+    jobs = generate_workload(rng, 8, 2, 1)
+    scaled = [
+        JobSpec(sizes=j.sizes * 13.7, probs=j.probs, job_id=j.job_id) for j in jobs
+    ]
+    np.testing.assert_array_equal(policies.rank_order(jobs), policies.rank_order(scaled))
+
+
+def test_conditional_job_consistency():
+    j = JobSpec(sizes=[1.0, 2.0, 5.0], probs=[0.3, 0.2, 0.5])
+    c = j.conditional(1)
+    np.testing.assert_allclose(c.sizes, [1.0, 4.0])
+    np.testing.assert_allclose(c.probs, [0.2 / 0.7, 0.5 / 0.7])
+    # conditional rank table matches JobSpec.conditional().rank
+    table = policies.rank_index_table([j])
+    assert table[0, 1] == pytest.approx(c.rank)
+
+
+def test_fifo_index_is_arrival_order():
+    jobs = [
+        JobSpec(sizes=[1, 2], probs=[0.5, 0.5], arrival=5.0, job_id=0),
+        JobSpec(sizes=[1, 2], probs=[0.5, 0.5], arrival=1.0, job_id=1),
+    ]
+    t = policies.fifo_index_table(jobs)
+    assert t[1, 0] < t[0, 0]

@@ -1,0 +1,98 @@
+"""Multi-server DES: paper Section V example + conservation invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import policies, simulator, trace
+from repro.core.jobs import JobSpec, generate_workload
+
+
+def test_paper_section_v_example():
+    """Single server, two jobs with arrivals — schedule from the paper text:
+    job1 stage1 [0,4]; job2 both stages [4,6]; job1 stage2 [6,12]."""
+    j1 = JobSpec(sizes=[4, 10], probs=[0.4, 0.6], arrival=0.0, job_id=0, outcome_stage=1)
+    j2 = JobSpec(sizes=[1, 2], probs=[0.2, 0.8], arrival=2.0, job_id=1, outcome_stage=1)
+    res = simulator.simulate([j1, j2], 1, "rank")
+    assert res.n_success == 2
+    # sojourns: job1 = 12-0, job2 = 6-2
+    assert res.mean_sojourn_successful == pytest.approx((12 + 4) / 2)
+
+
+def test_all_jobs_complete_and_success_count():
+    rng = np.random.default_rng(0)
+    jobs = trace.synthesize_trace(rng, n_jobs=500, duration_days=1)
+    n_pass = sum(j.outcome_stage == j.num_stages - 1 for j in jobs)
+    for pol in ("fifo", "serpt", "rank", "sr"):
+        res = simulator.simulate(jobs, 10, pol)
+        assert res.n_jobs == 500
+        assert res.n_success == n_pass  # outcomes are schedule-independent
+
+
+def test_fifo_never_preempts():
+    """With FIFO indices, a running job always wins stage-boundary contests,
+    so completion order of same-server jobs follows arrival order."""
+    jobs = [
+        JobSpec(sizes=[5, 6], probs=[0.5, 0.5], arrival=0.0, job_id=0, outcome_stage=1),
+        JobSpec(sizes=[1, 2], probs=[0.5, 0.5], arrival=1.0, job_id=1, outcome_stage=1),
+    ]
+    res = simulator.simulate(jobs, 1, "fifo")
+    # job0 runs [0,6] uninterrupted; job1 [6,8]: sojourns 6 and 7.
+    assert res.mean_sojourn_successful == pytest.approx(6.5)
+
+
+def test_more_servers_help_under_load():
+    rng = np.random.default_rng(1)
+    jobs = trace.synthesize_trace(rng, n_jobs=2000, duration_days=2)
+    r5 = simulator.simulate(jobs, 5, "rank")
+    r50 = simulator.simulate(jobs, 50, "rank")
+    assert r50.mean_sojourn_successful < r5.mean_sojourn_successful
+
+
+def test_rank_beats_fifo_on_trace():
+    rng = np.random.default_rng(2)
+    jobs = trace.synthesize_trace(rng, n_jobs=3000, duration_days=3)
+    fifo = simulator.simulate(jobs, 20, "fifo")
+    rank = simulator.simulate(jobs, 20, "rank")
+    assert rank.mean_sojourn_successful < fifo.mean_sojourn_successful
+
+
+def test_stage_overhead_increases_sojourn():
+    rng = np.random.default_rng(3)
+    jobs = trace.synthesize_trace(rng, n_jobs=500, duration_days=1)
+    base = simulator.simulate(jobs, 10, "rank")
+    slow = simulator.simulate(jobs, 10, "rank", stage_overhead=120.0)
+    assert slow.mean_sojourn_successful > base.mean_sojourn_successful
+
+
+def test_precomputed_index_table_matches_policy():
+    rng = np.random.default_rng(4)
+    jobs = trace.synthesize_trace(rng, n_jobs=300, duration_days=1)
+    table = policies.index_table(jobs, "serpt")
+    a = simulator.simulate(jobs, 8, "serpt")
+    b = simulator.simulate(jobs, 8, "ignored", idx_table=table)
+    assert a.mean_sojourn_successful == pytest.approx(b.mean_sojourn_successful)
+
+
+def test_trace_statistics_match_published():
+    rng = np.random.default_rng(5)
+    jobs = trace.synthesize_trace(rng, n_jobs=20_000)
+    n_pass = sum(j.outcome_stage == j.num_stages - 1 for j in jobs)
+    assert n_pass / len(jobs) == pytest.approx(trace.CATEGORY_PROBS["passed"], abs=0.02)
+    # ~86.6% of jobs have a single observed attempt (Table XV): passed 1-stage
+    # jobs have num_stages == 1.
+    one_attempt = trace.ATTEMPT_COUNTS[1] / sum(trace.ATTEMPT_COUNTS.values())
+    single = sum(
+        1
+        for j in jobs
+        if (j.outcome_stage == j.num_stages - 1 and j.num_stages == 1)
+        or (j.outcome_stage == 0 and j.num_stages > 1)
+    )
+    assert single / len(jobs) == pytest.approx(one_attempt, abs=0.02)
+
+
+def test_synthetic_success_prob_pinning():
+    rng = np.random.default_rng(6)
+    jobs = trace.synthesize_trace(rng, n_jobs=200, success_prob=0.25)
+    for j in jobs:
+        if j.num_stages > 1:
+            assert j.probs[-1] == pytest.approx(0.25)
