@@ -237,6 +237,81 @@ def table_faults(full: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Fused evaluator microbenchmark (BENCH_eval.json)
+# ---------------------------------------------------------------------------
+
+
+def table_eval_perf(full: bool = False):
+    """Seed materialized evaluator vs the fused streaming op.
+
+    The seed path builds the (K, N) outcome/duration/success tables on the
+    host and runs the jitted ``_static_batch`` reduction; the fused path
+    (``repro.kernels.sojourn_eval``) decodes combinations on the fly and
+    never materializes them.  Timed at K = 2**21 (the seed's exact-eval
+    cap); ``--full`` adds a fused-only row at K = 2**26, beyond what the
+    seed could represent in memory.
+    """
+    import jax
+
+    from repro.core import evaluator, policies
+
+    def fused_time(jobs, orders, repeats):
+        ts = []
+        for _ in range(repeats + 1):  # first rep warms the jit cache
+            t0 = time.perf_counter()
+            vals = evaluator.expected_sojourn_static(jobs, orders, impl="xla")
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:])), np.asarray(vals)
+
+    def seed_time(jobs, orders, repeats):
+        ts = []
+        for _ in range(repeats + 1):
+            t0 = time.perf_counter()
+            # per-call work in the seed design: materialize + gather + jit
+            outcomes, weights = evaluator.enumerate_outcomes(jobs)
+            durations, success = evaluator._realized_arrays(jobs, outcomes)
+            with jax.experimental.enable_x64(True):
+                vals = np.asarray(evaluator._static_batch(
+                    np.float64(durations), success, np.float64(weights),
+                    orders,
+                ))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:])), vals
+
+    rows = []
+    rng = np.random.default_rng(31)
+    repeats = 5 if full else 3
+
+    n = 21  # M=2 -> K = 2**21, the seed cap
+    jobs = generate_workload(rng, n)
+    orders = np.stack([policies.rank_order(jobs),
+                       rng.permutation(n).astype(np.int32)])
+    t_fused, v_fused = fused_time(jobs, orders, repeats)
+    t_seed, v_seed = seed_time(jobs, orders, repeats)
+    relerr = float(np.max(np.abs(v_fused - v_seed) / np.abs(v_seed)))
+    assert relerr <= 1e-9, f"fused/seed divergence: {relerr}"
+    rows.append({
+        "k_combos": 1 << n, "n_jobs": n, "orders": len(orders),
+        "seed_s": t_seed, "fused_s": t_fused,
+        "speedup": t_seed / t_fused, "max_relerr_vs_seed": relerr,
+    })
+
+    if full:  # beyond the seed's representable range: fused only
+        n = 26
+        jobs = generate_workload(rng, n)
+        orders = policies.rank_order(jobs)[None]
+        t_fused, _ = fused_time(jobs, orders, 1)
+        rows.append({
+            "k_combos": 1 << n, "n_jobs": n, "orders": 1,
+            "seed_s": None, "fused_s": t_fused,
+            "speedup": None, "max_relerr_vs_seed": None,
+        })
+
+    _save("BENCH_eval", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Roofline aggregation (reads dry-run artifacts)
 # ---------------------------------------------------------------------------
 
@@ -280,6 +355,7 @@ TABLES = {
     "stages": table_stages,
     "trace": table_trace,
     "faults": table_faults,
+    "eval_perf": table_eval_perf,
     "roofline": lambda full=False: table_roofline(),
 }
 

@@ -101,8 +101,12 @@ class ClusterManager:
         self.nodes_per_server = nodes_per_server
         self.resize_events = sorted(resize_events or [])
         specs = [j.spec for j in jobs]
+        # Both tables come from the workload-keyed cache, so repeated
+        # manager runs over the same workload (policy sweeps, fault-config
+        # sweeps) reuse one computation.  _stage_durs is the padded (N, M)
+        # increment matrix; stages >= num_stages are never dispatched.
         self.idx_table = policies.index_table(specs, policy)
-        self._stage_durs = [j.spec.stage_increments() for j in jobs]
+        self._stage_durs = policies.stage_durations(specs)
         self._outcomes = np.array(
             [j.realized_stop_stage(self.rng) for j in jobs], dtype=np.int64
         )

@@ -3,16 +3,30 @@
 The paper (Section IV-A1) evaluates a schedule *exactly* by enumerating all
 combinations of per-job outcomes (which checkpoint each job stops at),
 weighting each combination by its probability.  We reproduce that scheme,
-vectorized with JAX:
+fused and vectorized:
 
 * :func:`expected_sojourn_static` — a batch of static non-preemptive orders
   (Theorem III.1 justifies restricting to these for RANK/OPTIMAL/RANDOM)
-  evaluated against all outcome combinations at once.
+  evaluated by the fused :mod:`repro.kernels.sojourn_eval` op, which
+  decodes outcome combinations on the fly inside the kernel instead of
+  materializing the ``(K, N)`` outcome matrix host-side.  Exact
+  evaluation scales to ``MAX_EXACT_COMBOS = 2**26`` combinations in
+  bounded memory; explicit outcome tables (Monte-Carlo samples or a
+  shared exact table) ride the same op's streaming path.
 * :func:`expected_sojourn_dynamic` — stage-level policies (SR / SERPT /
   conditional-RANK) simulated in lockstep across all outcome combinations
-  with a ``lax.fori_loop`` (single-server, simultaneous arrivals).
+  with a ``lax.fori_loop`` (single-server, simultaneous arrivals).  This
+  path still needs a materialized outcome table, capped at
+  ``MAX_MATERIALIZED_COMBOS``.
 * :func:`optimal_order` — exhaustive search over permutations (N <= 9).
 * Monte-Carlo fallbacks for workloads whose combination count explodes.
+
+Static-order evaluation runs under ``jax.experimental.enable_x64`` so the
+fused op accumulates in float64 (<=1e-9 agreement with the seed path).
+Enumeration metadata (mixed-radix strides, combination counts) and padded
+workload arrays are cached per workload via
+:func:`repro.core.policies.workload_cached`, so the DES and cluster
+manager reuse them across policy x trial sweeps.
 
 Conventions: a combination with zero successful jobs contributes 0 (the
 paper's Eqs. (7)-(9) sum from l >= 1 successes).
@@ -30,6 +44,8 @@ import numpy as np
 
 from repro.core import policies
 from repro.core.jobs import Workload, pad_workload
+from repro.kernels.sojourn_eval import sojourn_eval
+from repro.kernels.sojourn_eval.ref import mixed_radix_strides
 
 __all__ = [
     "enumerate_outcomes",
@@ -38,10 +54,22 @@ __all__ = [
     "expected_sojourn_dynamic",
     "optimal_order",
     "evaluate",
+    "evaluate_many",
 ]
 
-#: Above this many outcome combinations, fall back to Monte Carlo.
-MAX_EXACT_COMBOS = 1 << 21
+#: Above this many outcome combinations, exact *static-order* evaluation
+#: (which streams combinations through the fused kernel without ever
+#: materializing them) falls back to Monte Carlo.
+MAX_EXACT_COMBOS = 1 << 26
+
+#: Above this many combinations, a (K, N) outcome table is too large to
+#: materialize (dynamic-policy lockstep simulation and shared exact tables).
+MAX_MATERIALIZED_COMBOS = 1 << 21
+
+
+def _x64():
+    """Static-order evaluation runs in float64 end to end."""
+    return jax.experimental.enable_x64(True)
 
 
 # ---------------------------------------------------------------------------
@@ -49,59 +77,85 @@ MAX_EXACT_COMBOS = 1 << 21
 # ---------------------------------------------------------------------------
 
 
+def _enum_meta(jobs: Workload) -> tuple[int, np.ndarray, np.ndarray]:
+    """Cached (K, strides, num_stages) mixed-radix enumeration metadata."""
+
+    def compute():
+        _, _, num_stages = policies.padded_arrays(jobs)
+        k_total = int(np.prod(num_stages, dtype=np.int64))
+        return k_total, mixed_radix_strides(num_stages), num_stages
+
+    return policies.workload_cached("enum_meta", jobs, compute)
+
+
 def enumerate_outcomes(jobs: Workload) -> tuple[np.ndarray, np.ndarray]:
-    """All outcome combinations.
+    """All outcome combinations, materialized.
 
     Returns:
       outcomes: (K, N) int32 — for each combination, the stage index at
         which each job stops (M_i - 1 == success).
       weights:  (K,) float64 — probability of each combination.
+
+    Only valid up to ``MAX_MATERIALIZED_COMBOS``; the fused evaluator
+    handles larger exact enumerations without materialization.
     """
-    _, probs, num_stages = pad_workload(jobs)
-    k_total = int(np.prod(num_stages))
-    if k_total > MAX_EXACT_COMBOS:
+    _, probs, _ = policies.padded_arrays(jobs)
+    k_total, strides, num_stages = _enum_meta(jobs)
+    if k_total > MAX_MATERIALIZED_COMBOS:
         raise ValueError(
-            f"{k_total} combinations exceed MAX_EXACT_COMBOS; use sample_outcomes"
+            f"{k_total} combinations exceed MAX_MATERIALIZED_COMBOS; use "
+            "sample_outcomes, or expected_sojourn_static(outcomes=None) "
+            "which enumerates inside the fused kernel"
         )
-    grids = np.meshgrid(*[np.arange(m) for m in num_stages], indexing="ij")
-    outcomes = np.stack([g.reshape(-1) for g in grids], axis=1).astype(np.int32)
-    weights = np.ones((k_total,), dtype=np.float64)
-    for i in range(len(jobs)):
-        weights *= probs[i, outcomes[:, i]]
+    # Single vectorized mixed-radix decode + gathered weight product (the
+    # seed looped over jobs for both the meshgrid and the product).
+    k = np.arange(k_total, dtype=np.int64)
+    outcomes = ((k[:, None] // strides[None, :]) % num_stages[None, :]).astype(
+        np.int32
+    )
+    weights = np.prod(
+        probs[np.arange(len(jobs))[None, :], outcomes], axis=1, dtype=np.float64
+    )
     return outcomes, weights
 
 
 def sample_outcomes(
     jobs: Workload, n_samples: int, rng: np.random.Generator
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Monte-Carlo outcome sampling; weights are uniform 1/S."""
-    _, probs, num_stages = pad_workload(jobs)
-    n = len(jobs)
-    outcomes = np.empty((n_samples, n), dtype=np.int32)
-    for i in range(n):
-        outcomes[:, i] = rng.choice(
-            num_stages[i], size=n_samples, p=probs[i, : num_stages[i]]
-        )
+    """Monte-Carlo outcome sampling; weights are uniform 1/S.
+
+    Vectorized inverse-CDF sampling over the whole (S, N) matrix in one
+    shot (the seed drew per-job ``rng.choice`` columns in a Python loop).
+    """
+    _, probs, num_stages = policies.padded_arrays(jobs)
+    cdf = np.cumsum(probs, axis=1)  # (N, M); padded stages add 0 mass
+    u = rng.random((n_samples, len(jobs)))
+    outcomes = np.sum(u[:, :, None] >= cdf[None, :, :], axis=2)
+    outcomes = np.minimum(outcomes, num_stages[None, :] - 1).astype(np.int32)
     weights = np.full((n_samples,), 1.0 / n_samples)
     return outcomes, weights
 
 
 def _realized_arrays(jobs: Workload, outcomes: np.ndarray):
     """Per-combination realized durations and success masks."""
-    sizes, _, num_stages = pad_workload(jobs)
+    sizes, _, num_stages = policies.padded_arrays(jobs)
     durations = sizes[np.arange(len(jobs)), outcomes]  # (K, N) fancy gather
     success = outcomes == (num_stages[None, :] - 1)
     return durations, success
 
 
 # ---------------------------------------------------------------------------
-# Static non-preemptive orders (JAX, batched over orders)
+# Static non-preemptive orders (fused sojourn_eval op)
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("also_all_jobs",))
 def _static_batch(durations, success, weights, orders, also_all_jobs=False):
-    """E[sojourn of successful jobs] for each order in a batch.
+    """Seed reference path: E[sojourn of successful jobs] per order.
+
+    Retained as the parity oracle for the fused op (tests and the
+    ``table_eval_perf`` benchmark); production calls go through
+    :func:`repro.kernels.sojourn_eval.sojourn_eval`.
 
     durations: (K, N)  realized total service per job per combination
     success:   (K, N)  bool
@@ -132,31 +186,44 @@ def expected_sojourn_static(
     weights: np.ndarray | None = None,
     batch: int = 4096,
     also_all_jobs: bool = False,
+    impl: str = "auto",
 ):
-    """Exact expected sojourn of successful jobs for static order(s).
+    """Expected sojourn of successful jobs for static order(s), fused.
 
     ``orders`` may be (N,) for a single order or (P, N) for a batch.
+    With ``outcomes=None`` the evaluation is exact: all ``prod(M_i)``
+    combinations are enumerated *inside* the fused kernel (up to
+    ``MAX_EXACT_COMBOS``, never materializing a (K, N) array).  Passing
+    explicit ``outcomes``/``weights`` (Monte-Carlo samples or a shared
+    exact table) streams them through the same op.  ``batch`` is kept
+    for API compatibility; order batching now happens inside the op.
     """
+    del batch  # order batching lives in ops.sojourn_eval
     orders = np.asarray(orders, dtype=np.int32)
     single = orders.ndim == 1
     if single:
         orders = orders[None]
+    sizes, probs, num_stages = policies.padded_arrays(jobs)
     if outcomes is None:
-        outcomes, weights = enumerate_outcomes(jobs)
-    durations, success = _realized_arrays(jobs, outcomes)
-    dj = jnp.asarray(durations)
-    sj = jnp.asarray(success)
-    wj = jnp.asarray(weights)
-    outs = []
-    for lo in range(0, orders.shape[0], batch):
-        chunk = jnp.asarray(orders[lo : lo + batch])
-        outs.append(_static_batch(dj, sj, wj, chunk, also_all_jobs=also_all_jobs))
+        k_total, _, _ = _enum_meta(jobs)
+        if k_total > MAX_EXACT_COMBOS:
+            raise ValueError(
+                f"{k_total} combinations exceed MAX_EXACT_COMBOS; use "
+                "sample_outcomes"
+            )
+    with _x64():
+        e_succ, e_all = sojourn_eval(
+            sizes,
+            probs,
+            num_stages,
+            orders,
+            outcomes=outcomes,
+            weights=weights,
+            impl=impl,
+        )
     if also_all_jobs:
-        e_succ = np.concatenate([np.asarray(o[0]) for o in outs])
-        e_all = np.concatenate([np.asarray(o[1]) for o in outs])
         return (e_succ[0], e_all[0]) if single else (e_succ, e_all)
-    res = np.concatenate([np.asarray(o) for o in outs])
-    return float(res[0]) if single else res
+    return float(e_succ[0]) if single else e_succ
 
 
 # ---------------------------------------------------------------------------
@@ -217,9 +284,9 @@ def expected_sojourn_dynamic(
     """Exact expected sojourn of successful jobs for a stage-level policy."""
     if outcomes is None:
         outcomes, weights = enumerate_outcomes(jobs)
-    sizes, _, num_stages = pad_workload(jobs)
+    _, _, num_stages = policies.padded_arrays(jobs)
     idx_table = policies.index_table(jobs, policy)
-    stage_durs = np.diff(sizes, axis=1, prepend=0.0)
+    stage_durs = policies.stage_durations(jobs)
     _, success = _realized_arrays(jobs, outcomes)
     total_stages = int(num_stages.sum())
     val = _dynamic_batch(
@@ -279,8 +346,7 @@ def evaluate(
 
 
 def exact_combination_count(jobs: Workload) -> int:
-    _, _, num_stages = pad_workload(jobs)
-    return int(np.prod(num_stages))
+    return _enum_meta(jobs)[0]
 
 
 def evaluate_many(
@@ -289,12 +355,30 @@ def evaluate_many(
     rng: np.random.Generator,
     mc_samples: int = 4096,
 ) -> dict[str, float]:
-    """Evaluate several policies on one job group, sharing outcome tables."""
-    if exact_combination_count(jobs) <= MAX_EXACT_COMBOS:
+    """Evaluate several policies on one job group, sharing outcome tables.
+
+    Three regimes by combination count K:
+      * K <= MAX_MATERIALIZED_COMBOS: one shared exact table for all
+        policies (static and dynamic).
+      * K <= MAX_EXACT_COMBOS: static orders stay *exact* via the fused
+        streaming kernel; dynamic policies (which need a materialized
+        table) fall back to shared Monte-Carlo samples.
+      * otherwise: Monte Carlo for everything.
+    """
+    k_total = exact_combination_count(jobs)
+    if k_total <= MAX_MATERIALIZED_COMBOS:
         outcomes, weights = enumerate_outcomes(jobs)
-    else:
-        outcomes, weights = sample_outcomes(jobs, mc_samples, rng)
-    return {
-        alg: evaluate(jobs, alg, rng=rng, outcomes=outcomes, weights=weights)
-        for alg in algs
-    }
+        return {
+            alg: evaluate(jobs, alg, rng=rng, outcomes=outcomes, weights=weights)
+            for alg in algs
+        }
+    mc: tuple[np.ndarray, np.ndarray] | None = None
+    out: dict[str, float] = {}
+    for alg in algs:
+        if alg in ("serpt", "sr") or k_total > MAX_EXACT_COMBOS:
+            if mc is None:
+                mc = sample_outcomes(jobs, mc_samples, rng)
+            out[alg] = evaluate(jobs, alg, rng=rng, outcomes=mc[0], weights=mc[1])
+        else:
+            out[alg] = evaluate(jobs, alg, rng=rng)
+    return out

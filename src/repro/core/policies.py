@@ -21,11 +21,19 @@ manager.
 
 from __future__ import annotations
 
+import hashlib
+import threading
+from collections import OrderedDict
+
 import numpy as np
 
 from repro.core.jobs import JobSpec, Workload, pad_workload
 
 __all__ = [
+    "workload_key",
+    "workload_cached",
+    "padded_arrays",
+    "stage_durations",
     "rank_values",
     "erpt_values",
     "sr_rank_values",
@@ -43,21 +51,103 @@ _INF = np.float64(np.inf)
 
 
 # ---------------------------------------------------------------------------
+# Workload-keyed derived-data cache
+# ---------------------------------------------------------------------------
+#
+# The DES (`simulator.py`) and the cluster manager re-derive the same
+# padded arrays, stage-duration tables and policy index tables once per
+# policy x trial.  All of those are pure functions of the workload's
+# (sizes, probs, arrival) content, so we key a small LRU cache on a
+# digest of those bytes and compute each derived table once per workload.
+# Cached arrays are returned read-only; callers that need to mutate must
+# copy.
+
+_CACHE_CAPACITY = 256
+_cache: OrderedDict[tuple[str, str], object] = OrderedDict()
+_cache_lock = threading.Lock()
+
+
+def workload_key(jobs: Workload) -> str:
+    """Content digest of a workload (per-job sizes/probs/arrival)."""
+    h = hashlib.sha1()
+    for job in jobs:
+        h.update(np.int64(job.num_stages).tobytes())
+        h.update(np.asarray(job.sizes, dtype=np.float64).tobytes())
+        h.update(np.asarray(job.probs, dtype=np.float64).tobytes())
+        h.update(np.float64(job.arrival).tobytes())
+    return h.hexdigest()
+
+
+def _freeze(value):
+    if isinstance(value, np.ndarray):
+        value.flags.writeable = False
+    elif isinstance(value, tuple):
+        for v in value:
+            if isinstance(v, np.ndarray):
+                v.flags.writeable = False
+    return value
+
+
+def workload_cached(kind: str, jobs: Workload, compute):
+    """Memoize ``compute()`` under ``(kind, workload_key(jobs))``."""
+    key = (kind, workload_key(jobs))
+    with _cache_lock:
+        if key in _cache:
+            _cache.move_to_end(key)
+            return _cache[key]
+    value = _freeze(compute())
+    with _cache_lock:
+        _cache[key] = value
+        _cache.move_to_end(key)
+        while len(_cache) > _CACHE_CAPACITY:
+            _cache.popitem(last=False)
+    return value
+
+
+def clear_workload_cache() -> None:
+    with _cache_lock:
+        _cache.clear()
+
+
+def padded_arrays(jobs: Workload) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Cached ``pad_workload(jobs)``: (sizes (N,M), probs (N,M), num_stages)."""
+    return workload_cached("padded", jobs, lambda: pad_workload(jobs))
+
+
+def stage_durations(jobs: Workload) -> np.ndarray:
+    """Cached (N, M) per-stage service increments (0 for padded stages)."""
+
+    def compute():
+        sizes, _, _ = padded_arrays(jobs)
+        return np.diff(sizes, axis=1, prepend=0.0)
+
+    return workload_cached("stage_durs", jobs, compute)
+
+
+# ---------------------------------------------------------------------------
 # Static (whole-job) indices
 # ---------------------------------------------------------------------------
 
 
 def erpt_values(jobs: Workload) -> np.ndarray:
     """ERPT(i) = sum_j x_{i,j} p_{i,j} (paper Section III-A)."""
-    sizes, probs, _ = pad_workload(jobs)
-    return np.einsum("nm,nm->n", sizes, probs)
+
+    def compute():
+        sizes, probs, _ = padded_arrays(jobs)
+        return np.einsum("nm,nm->n", sizes, probs)
+
+    return workload_cached("erpt_values", jobs, compute)
 
 
 def rank_values(jobs: Workload) -> np.ndarray:
     """Paper Eq. (23): R(i) = E[size] / p_success."""
-    sizes, probs, num_stages = pad_workload(jobs)
-    p_succ = probs[np.arange(len(jobs)), num_stages - 1]
-    return np.einsum("nm,nm->n", sizes, probs) / p_succ
+
+    def compute():
+        sizes, probs, num_stages = padded_arrays(jobs)
+        p_succ = probs[np.arange(len(jobs)), num_stages - 1]
+        return np.einsum("nm,nm->n", sizes, probs) / p_succ
+
+    return workload_cached("rank_values", jobs, compute)
 
 
 def sr_rank_values(jobs: Workload) -> np.ndarray:
@@ -67,11 +157,15 @@ def sr_rank_values(jobs: Workload) -> np.ndarray:
 
 def rank_order(jobs: Workload) -> np.ndarray:
     """The RANK schedule: ascending R(i), stable in job position."""
-    return np.argsort(rank_values(jobs), kind="stable")
+    return workload_cached(
+        "rank_order", jobs, lambda: np.argsort(rank_values(jobs), kind="stable")
+    )
 
 
 def serpt_order(jobs: Workload) -> np.ndarray:
-    return np.argsort(erpt_values(jobs), kind="stable")
+    return workload_cached(
+        "serpt_order", jobs, lambda: np.argsort(erpt_values(jobs), kind="stable")
+    )
 
 
 def random_order(jobs: Workload, rng: np.random.Generator) -> np.ndarray:
@@ -150,9 +244,15 @@ DYNAMIC_POLICIES = {
 
 
 def index_table(jobs: Workload, policy: str) -> np.ndarray:
+    """Cached stage-level index table for ``policy``.
+
+    Computed once per (policy, workload) instead of once per trial in the
+    DES / cluster-manager sweeps.
+    """
     try:
-        return DYNAMIC_POLICIES[policy](jobs)
+        fn = DYNAMIC_POLICIES[policy]
     except KeyError:
         raise ValueError(
             f"unknown dynamic policy {policy!r}; options: {sorted(DYNAMIC_POLICIES)}"
         ) from None
+    return workload_cached(f"idx_table:{policy}", jobs, lambda: fn(jobs))

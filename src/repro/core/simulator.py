@@ -22,7 +22,7 @@ import itertools
 import numpy as np
 
 from repro.core import policies
-from repro.core.jobs import Workload, pad_workload
+from repro.core.jobs import Workload
 
 __all__ = ["SimResult", "ReadyQueue", "simulate"]
 
@@ -97,8 +97,10 @@ def simulate(
         (0 reproduces the paper; >0 models checkpoint save cost).
     """
     n = len(jobs)
-    sizes, _, num_stages = pad_workload(jobs)
-    stage_durs = np.diff(sizes, axis=1, prepend=0.0)
+    # Workload-keyed cache: padded arrays, stage durations and the policy
+    # index table are computed once per workload, not once per trial.
+    _, _, num_stages = policies.padded_arrays(jobs)
+    stage_durs = policies.stage_durations(jobs)
     if idx_table is None:
         idx_table = policies.index_table(jobs, policy)
     outcomes = _realize_outcomes(jobs, rng)

@@ -15,5 +15,9 @@ Each kernel package has three modules:
 
 Kernels: ``flash_attention`` (causal / sliding-window / GQA fused
 attention), ``ssd_scan`` (Mamba-2 state-space duality chunked scan),
-``moe_gemm`` (per-expert grouped GEMM with fused SwiGLU).
+``moe_gemm`` (per-expert grouped GEMM with fused SwiGLU), and
+``sojourn_eval`` — the one *control-plane* kernel: the paper's exact
+Eq. (7)-(9) evaluation of E[sojourn of successful jobs], fused so the
+outcome-combination matrix is decoded on the fly instead of
+materialized (see that package's docstring for the tile design note).
 """

@@ -1,0 +1,261 @@
+"""Fused expected-sojourn evaluation of static orders as Pallas kernels.
+
+The exact evaluation scheme (paper §IV-A1, Eqs. 7-9) scores a static
+non-preemptive order by enumerating every per-job outcome combination.
+The seed implementation materialized the full ``(K, N)`` outcome matrix
+in host NumPy (capping K at 2**21); these kernels never materialize it:
+
+* ``sojourn_enum`` — each grid tile owns ``BLOCK_COMBOS`` *combination
+  indices* and decodes them on the fly with the mixed-radix rule
+  ``stage_i(k) = (k // stride_i) % M_i`` (job 0 is the most-significant
+  digit, matching :func:`repro.core.evaluator.enumerate_outcomes`).
+  Realized durations / termination probabilities are gathered from the
+  padded ``(N, M)`` tables by a one-hot select over the (small) stage
+  axis — TPU-friendly: no vector gather, only ``(SUBLANES, LANES)``
+  selects.  The per-order completion-time prefix sum runs in the same
+  position loop, and the probability-weighted successful-job sojourn
+  accumulates into a VMEM scratch tile that persists across the
+  (sequential, innermost) combination-tile grid dimension.
+
+* ``sojourn_outcomes`` — the same fused gather + prefix sum + weighted
+  reduction for an *explicit* outcome matrix (Monte-Carlo samples or a
+  shared exact table).  The ``(K, N)`` int32 matrix is streamed through
+  VMEM in ``(SUBLANES, LANES)``-shaped tiles laid out stage-major, so
+  the float duration/success matrices of the seed path are never built.
+
+Both kernels take per-*order* inputs (grid dim 0) whose job axis is
+pre-permuted by the caller (``ops.py``), so position ``pos`` in the
+kernel loop *is* service position: the running sum ``t`` after ``pos``
+steps is the completion time of the job served ``pos``-th.
+
+Accumulation happens in the input dtype: float64 under
+``jax.experimental.enable_x64`` (CPU interpret / XLA paths — this is
+what the exact evaluator uses and what the <=1e-9 parity tests check),
+float32 on real TPU grids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sojourn_enum", "sojourn_outcomes", "BLOCK_COMBOS", "SUBLANES", "LANES"]
+
+SUBLANES = 8  # float32 min sublane count
+LANES = 128  # TPU lane width
+#: Combination indices decoded / streamed per grid tile.
+BLOCK_COMBOS = SUBLANES * LANES
+
+
+def _tile_combo_ids(kt: jax.Array) -> jax.Array:
+    """(SUBLANES, LANES) combination indices owned by tile ``kt``."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+    return kt * BLOCK_COMBOS + row * LANES + col
+
+
+def _flush(succ_ref, all_ref, acc_succ, acc_all):
+    succ_ref[0, 0] = jnp.sum(acc_succ[...])
+    all_ref[0, 0] = jnp.sum(acc_all[...])
+
+
+# ---------------------------------------------------------------------------
+# Enumeration mode: decode combination indices on the fly (Eqs. 7-9 exact)
+# ---------------------------------------------------------------------------
+
+
+def _enum_kernel(
+    strides_ref,  # (1, N) int32 SMEM, per-order permuted mixed-radix strides
+    radix_ref,  # (1, N) int32 SMEM, per-order permuted stage counts M_i
+    sizes_ref,  # (1, N, M) VMEM, per-order permuted cumulative sizes
+    probs_ref,  # (1, N, M) VMEM, per-order permuted stop probabilities
+    succ_ref,  # (1, 1) out: E[sojourn | successful jobs] accumulator
+    all_ref,  # (1, 1) out: E[sojourn | all jobs]
+    acc_succ,  # (SUBLANES, LANES) VMEM scratch
+    acc_all,
+    *,
+    n: int,
+    m: int,
+    k_total: int,
+    nkt: int,
+):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_succ[...] = jnp.zeros_like(acc_succ)
+        acc_all[...] = jnp.zeros_like(acc_all)
+
+    dtype = acc_succ.dtype
+    k = _tile_combo_ids(kt)
+    # Eq. (8): combination probability = prod_i p_{i, stage_i(k)}; the tail
+    # tile is masked by zeroing its weight (k >= K contributes nothing).
+    w = (k < k_total).astype(dtype)
+    t = jnp.zeros((SUBLANES, LANES), dtype)  # completion time at position pos
+    tsum = jnp.zeros((SUBLANES, LANES), dtype)  # sum of completion times
+    tot = jnp.zeros((SUBLANES, LANES), dtype)  # sum over successful jobs
+    cnt = jnp.zeros((SUBLANES, LANES), jnp.int32)  # successes l(k)
+    for pos in range(n):
+        stride = strides_ref[0, pos]
+        radix = radix_ref[0, pos]
+        s = (k // stride) % radix  # on-the-fly mixed-radix decode
+        d = jnp.zeros((SUBLANES, LANES), dtype)
+        p = jnp.zeros((SUBLANES, LANES), dtype)
+        for j in range(m):  # one-hot gather over the (small) stage axis
+            hit = s == j
+            d = jnp.where(hit, sizes_ref[0, pos, j], d)
+            p = jnp.where(hit, probs_ref[0, pos, j], p)
+        w = w * p
+        t = t + d
+        succ = s == radix - 1
+        tot = jnp.where(succ, tot + t, tot)
+        cnt = cnt + succ.astype(jnp.int32)
+        tsum = tsum + t
+    # Eq. (7): mean sojourn of the l(k) successful jobs (0 when l = 0);
+    # Eq. (9): the probability-weighted sum, tiled into the scratch.
+    mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+    acc_succ[...] += w * mean
+    acc_all[...] += w * (tsum / n)
+
+    @pl.when(kt == nkt - 1)
+    def _finalize():
+        _flush(succ_ref, all_ref, acc_succ, acc_all)
+
+
+def sojourn_enum(
+    sizes_p: jax.Array,  # (P, N, M) per-order permuted cumulative sizes
+    probs_p: jax.Array,  # (P, N, M) per-order permuted probabilities
+    strides_p: jax.Array,  # (P, N) int32 permuted mixed-radix strides
+    radix_p: jax.Array,  # (P, N) int32 permuted stage counts
+    k_total: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact (E[sojourn successful], E[sojourn all]) per order, fused."""
+    p_orders, n, m = sizes_p.shape
+    nkt = max(1, pl.cdiv(k_total, BLOCK_COMBOS))
+    dtype = sizes_p.dtype
+    kernel = functools.partial(_enum_kernel, n=n, m=m, k_total=k_total, nkt=nkt)
+    out_succ, out_all = pl.pallas_call(
+        kernel,
+        grid=(p_orders, nkt),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+        ],
+        interpret=interpret,
+    )(strides_p, radix_p, sizes_p, probs_p)
+    return out_succ[:, 0], out_all[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Explicit-outcome mode: stream a (K, N) outcome matrix (MC / shared tables)
+# ---------------------------------------------------------------------------
+
+
+def _outcomes_kernel(
+    order_ref,  # (1, N) int32 SMEM: original job id served at each position
+    radix_ref,  # (1, N) int32 SMEM, per-order permuted stage counts
+    sizes_ref,  # (1, N, M) VMEM, per-order permuted cumulative sizes
+    outcomes_ref,  # (N, 1, SUBLANES, LANES) int32 VMEM, original job indexing
+    weights_ref,  # (1, SUBLANES, LANES) VMEM, zero-padded combination weights
+    succ_ref,  # (1, 1) out
+    all_ref,  # (1, 1) out
+    acc_succ,
+    acc_all,
+    *,
+    n: int,
+    m: int,
+    nkt: int,
+):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_succ[...] = jnp.zeros_like(acc_succ)
+        acc_all[...] = jnp.zeros_like(acc_all)
+
+    dtype = acc_succ.dtype
+    w = weights_ref[0]  # tail tiles are weight-padded with zeros
+    t = jnp.zeros((SUBLANES, LANES), dtype)
+    tsum = jnp.zeros((SUBLANES, LANES), dtype)
+    tot = jnp.zeros((SUBLANES, LANES), dtype)
+    cnt = jnp.zeros((SUBLANES, LANES), jnp.int32)
+    for pos in range(n):
+        job = order_ref[0, pos]
+        radix = radix_ref[0, pos]
+        s = outcomes_ref[job, 0]  # (SUBLANES, LANES) realized stop stages
+        d = jnp.zeros((SUBLANES, LANES), dtype)
+        for j in range(m):
+            d = jnp.where(s == j, sizes_ref[0, pos, j], d)
+        t = t + d
+        succ = s == radix - 1
+        tot = jnp.where(succ, tot + t, tot)
+        cnt = cnt + succ.astype(jnp.int32)
+        tsum = tsum + t
+    mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+    acc_succ[...] += w * mean
+    acc_all[...] += w * (tsum / n)
+
+    @pl.when(kt == nkt - 1)
+    def _finalize():
+        _flush(succ_ref, all_ref, acc_succ, acc_all)
+
+
+def sojourn_outcomes(
+    sizes_p: jax.Array,  # (P, N, M) per-order permuted cumulative sizes
+    radix_p: jax.Array,  # (P, N) int32 permuted stage counts
+    orders: jax.Array,  # (P, N) int32 original job ids by position
+    outcomes_t: jax.Array,  # (N, KT, SUBLANES, LANES) int32 streamed tiles
+    weights_t: jax.Array,  # (KT, SUBLANES, LANES) zero-padded weights
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused static-order evaluation over an explicit outcome matrix."""
+    p_orders, n, m = sizes_p.shape
+    nkt = weights_t.shape[0]
+    dtype = sizes_p.dtype
+    kernel = functools.partial(_outcomes_kernel, n=n, m=m, nkt=nkt)
+    out_succ, out_all = pl.pallas_call(
+        kernel,
+        grid=(p_orders, nkt),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+            pl.BlockSpec((n, 1, SUBLANES, LANES), lambda p, kt: (0, kt, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda p, kt: (kt, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+        ],
+        interpret=interpret,
+    )(orders, radix_p, sizes_p, outcomes_t, weights_t)
+    return out_succ[:, 0], out_all[:, 0]

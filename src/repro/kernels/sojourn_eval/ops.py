@@ -1,0 +1,255 @@
+"""Public fused sojourn-evaluation op with implementation dispatch.
+
+``impl``:
+  * "xla"       — tiled jit implementation: a ``lax.scan`` over
+                  combination tiles decodes the mixed-radix indices on
+                  the fly and accumulates the weighted reduction.  Same
+                  streaming structure as the Pallas kernel (bounded
+                  memory, no (K, N) host materialization); default on
+                  CPU and the path the exact evaluator rides.
+  * "pallas"    — the TPU Pallas kernels (compiled via Mosaic).
+  * "interpret" — the Pallas kernels interpreted on CPU (parity tests).
+  * "auto"      — "pallas" on TPU backends, else "xla".
+
+Two entry modes, mirroring :mod:`repro.core.evaluator`'s two sources of
+outcome combinations:
+
+* ``sojourn_eval(..., outcomes=None)`` — *exact enumeration*: evaluates
+  all ``K = prod(M_i)`` combinations without ever materializing them
+  (supports K up to ``repro.core.evaluator.MAX_EXACT_COMBOS``).
+* ``sojourn_eval(..., outcomes=, weights=)`` — *explicit outcomes*:
+  Monte-Carlo samples or a shared exact table; the float duration and
+  success matrices of the seed path are never built host-side.
+
+Precision follows the ambient JAX x64 mode: the evaluator calls this op
+under ``jax.experimental.enable_x64`` so everything accumulates in
+float64 (<=1e-9 parity with the seed path); on TPU the compiled kernels
+run in float32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sojourn_eval import kernel as K
+from repro.kernels.sojourn_eval.ref import mixed_radix_strides
+
+__all__ = ["sojourn_eval"]
+
+Impl = Literal["auto", "xla", "pallas", "interpret"]
+
+#: Combination indices per XLA scan tile (bounded-memory streaming).
+XLA_TILE = 1 << 15
+#: Soft cap on bytes of per-tile intermediates in the XLA path.
+_TILE_BYTES_BUDGET = 256 << 20
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("xla", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto/xla/pallas/interpret")
+    return impl
+
+
+def _order_batch(n_orders: int, tile: int, n: int) -> int:
+    """Orders per jit call so (P_b, tile, N) intermediates stay bounded."""
+    per_order = tile * n * 8  # float64 worst case
+    return max(1, min(n_orders, 4096, _TILE_BYTES_BUDGET // max(per_order, 1)))
+
+
+# ---------------------------------------------------------------------------
+# XLA streaming implementation (shared decode across the order batch)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strides", "radix", "k_total", "tile")
+)
+def _enum_xla(sizes, probs, orders, *, strides, radix, k_total, tile):
+    """Exact fused evaluation; ``strides``/``radix`` are static tuples so
+    the mixed-radix decode lowers to constant div/mod chains."""
+    n = orders.shape[1]
+    strides_a = jnp.asarray(strides, jnp.int32)[None, :]
+    radix_a = jnp.asarray(radix, jnp.int32)[None, :]
+    job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    n_tiles = max(1, -(-k_total // tile))
+
+    def tile_fn(carry, t):
+        e_succ, e_all = carry
+        k = t * tile + jnp.arange(tile, dtype=jnp.int32)
+        valid = k < k_total
+        s = (k[:, None] // strides_a) % radix_a  # (T, N) on-the-fly decode
+        w = jnp.prod(probs[job_ids, s], axis=1) * valid  # Eq. (8)
+        d = sizes[job_ids, s]  # (T, N) realized durations
+        succ = s == radix_a - 1
+        cnt = jnp.sum(succ, axis=1)  # order-invariant success count
+        inv_cnt = jnp.where(cnt > 0, 1.0 / jnp.maximum(cnt, 1), 0.0)
+
+        def per_order(order):
+            tcum = jnp.cumsum(jnp.take(d, order, axis=1), axis=1)
+            tot = jnp.sum(tcum * jnp.take(succ, order, axis=1), axis=1)
+            return (
+                jnp.dot(w, tot * inv_cnt),  # Eqs. (7)+(9)
+                jnp.dot(w, jnp.mean(tcum, axis=1)),
+            )
+
+        des, dea = jax.vmap(per_order)(orders)
+        return (e_succ + des, e_all + dea), None
+
+    zeros = jnp.zeros((orders.shape[0],), sizes.dtype)
+    (e_succ, e_all), _ = jax.lax.scan(
+        tile_fn, (zeros, zeros), jnp.arange(n_tiles, dtype=jnp.int32)
+    )
+    return e_succ, e_all
+
+
+@jax.jit
+def _outcomes_xla(sizes, num_stages, outcomes, weights, orders):
+    """Fused evaluation over an explicit outcome matrix: the duration and
+    success gathers happen on-device instead of as host fancy-indexing."""
+    n = orders.shape[1]
+    job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    d = sizes[job_ids, outcomes]  # (K, N)
+    succ = outcomes == num_stages[None, :] - 1
+    cnt = jnp.sum(succ, axis=1)
+    inv_cnt = jnp.where(cnt > 0, 1.0 / jnp.maximum(cnt, 1), 0.0)
+
+    def per_order(order):
+        tcum = jnp.cumsum(jnp.take(d, order, axis=1), axis=1)
+        tot = jnp.sum(tcum * jnp.take(succ, order, axis=1), axis=1)
+        return (
+            jnp.dot(weights, tot * inv_cnt),
+            jnp.dot(weights, jnp.mean(tcum, axis=1)),
+        )
+
+    return jax.vmap(per_order)(orders)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-path input preparation
+# ---------------------------------------------------------------------------
+
+
+def _permuted(arrs, orders_b):
+    """Take the job axis of each array along every order in the batch."""
+    return [np.take(a, orders_b, axis=0) for a in arrs]
+
+
+def _tile_outcomes(outcomes, weights):
+    """(K, N) -> (N, KT, SUBLANES, LANES) stage tiles + zero-padded weights."""
+    k_total, n = outcomes.shape
+    bk = K.BLOCK_COMBOS
+    nkt = max(1, -(-k_total // bk))
+    pad = nkt * bk - k_total
+    oc = np.pad(outcomes.astype(np.int32), ((0, pad), (0, 0)))
+    wt = np.pad(np.asarray(weights), (0, pad))
+    oc_t = oc.T.reshape(n, nkt, K.SUBLANES, K.LANES)
+    wt_t = wt.reshape(nkt, K.SUBLANES, K.LANES)
+    return oc_t, wt_t
+
+
+# ---------------------------------------------------------------------------
+# Public op
+# ---------------------------------------------------------------------------
+
+
+def sojourn_eval(
+    sizes: np.ndarray,  # (N, M) padded cumulative sizes
+    probs: np.ndarray,  # (N, M) padded stop probabilities
+    num_stages: np.ndarray,  # (N,) stage counts
+    orders: np.ndarray,  # (P, N) static orders
+    *,
+    outcomes: np.ndarray | None = None,  # optional (K, N) explicit outcomes
+    weights: np.ndarray | None = None,  # (K,) weights (required with outcomes)
+    impl: Impl = "auto",
+) -> tuple[np.ndarray, np.ndarray]:
+    """(E[sojourn successful], E[sojourn all]) per order; see module doc."""
+    impl = _resolve(impl)
+    sizes = np.asarray(sizes)
+    probs = np.asarray(probs)
+    num_stages = np.asarray(num_stages, dtype=np.int64)
+    orders = np.asarray(orders, dtype=np.int32)
+    n = sizes.shape[0]
+    if orders.ndim != 2 or orders.shape[1] != n:
+        raise ValueError(f"orders must be (P, {n}); got {orders.shape}")
+    strides = mixed_radix_strides(num_stages)
+    fdt = jnp.asarray(sizes).dtype  # f64 under x64, else f32
+    sizes_j = jnp.asarray(sizes, fdt)
+    probs_j = jnp.asarray(probs, fdt)
+
+    interpret = impl == "interpret"
+    e_succ_parts, e_all_parts = [], []
+    if outcomes is None:
+        k_total = int(np.prod(num_stages, dtype=np.int64))
+        tile = min(XLA_TILE, max(K.BLOCK_COMBOS, 1 << (k_total - 1).bit_length()))
+        pb = _order_batch(orders.shape[0], tile, n)
+        for lo in range(0, orders.shape[0], pb):
+            ob = orders[lo : lo + pb]
+            if impl == "xla":
+                es, ea = _enum_xla(
+                    sizes_j,
+                    probs_j,
+                    jnp.asarray(ob),
+                    strides=tuple(int(s) for s in strides),
+                    radix=tuple(int(r) for r in num_stages),
+                    k_total=k_total,
+                    tile=tile,
+                )
+            else:
+                sz_p, pr_p, st_p, rx_p = _permuted(
+                    [sizes, probs, strides.astype(np.int32),
+                     num_stages.astype(np.int32)],
+                    ob,
+                )
+                es, ea = K.sojourn_enum(
+                    jnp.asarray(sz_p, fdt),
+                    jnp.asarray(pr_p, fdt),
+                    jnp.asarray(st_p),
+                    jnp.asarray(rx_p),
+                    k_total,
+                    interpret=interpret,
+                )
+            e_succ_parts.append(np.asarray(es))
+            e_all_parts.append(np.asarray(ea))
+    else:
+        if weights is None:
+            raise ValueError("explicit outcomes need weights")
+        outcomes = np.asarray(outcomes, dtype=np.int32)
+        if impl != "xla":
+            oc_t, wt_t = _tile_outcomes(outcomes, weights)
+            oc_j, wt_j = jnp.asarray(oc_t), jnp.asarray(wt_t, fdt)
+        else:
+            oc_j = jnp.asarray(outcomes)
+            wt_j = jnp.asarray(weights, fdt)
+        pb = _order_batch(orders.shape[0], outcomes.shape[0], n)
+        for lo in range(0, orders.shape[0], pb):
+            ob = orders[lo : lo + pb]
+            if impl == "xla":
+                es, ea = _outcomes_xla(
+                    sizes_j,
+                    jnp.asarray(num_stages, jnp.int32),
+                    oc_j,
+                    wt_j,
+                    jnp.asarray(ob),
+                )
+            else:
+                sz_p, rx_p = _permuted(
+                    [sizes, num_stages.astype(np.int32)], ob
+                )
+                es, ea = K.sojourn_outcomes(
+                    jnp.asarray(sz_p, fdt),
+                    jnp.asarray(rx_p),
+                    jnp.asarray(ob),
+                    oc_j,
+                    wt_j,
+                    interpret=interpret,
+                )
+            e_succ_parts.append(np.asarray(es))
+            e_all_parts.append(np.asarray(ea))
+    return np.concatenate(e_succ_parts), np.concatenate(e_all_parts)

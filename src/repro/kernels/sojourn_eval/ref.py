@@ -1,0 +1,63 @@
+"""Dense pure-jnp oracle for the fused sojourn evaluator.
+
+Materializes the full ``(K, N)`` decoded outcome matrix (so it is only
+usable at small K) and evaluates every order against it with the exact
+math of the paper's Eqs. (7)-(9).  This is the parity reference for both
+the Pallas kernels and the tiled XLA path in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["mixed_radix_strides", "ref_decode", "ref_sojourn"]
+
+
+def mixed_radix_strides(num_stages: np.ndarray) -> np.ndarray:
+    """Strides s.t. ``stage_i(k) = (k // stride_i) % M_i``; job 0 is the
+    most-significant digit (matches ``np.meshgrid(..., indexing="ij")``)."""
+    rev = np.cumprod(np.asarray(num_stages, dtype=np.int64)[::-1])[::-1]
+    return np.concatenate([rev[1:], [1]])
+
+
+def ref_decode(num_stages: np.ndarray, k_total: int) -> np.ndarray:
+    """(K, N) decoded stop-stage matrix for all combinations."""
+    strides = mixed_radix_strides(num_stages)
+    k = np.arange(k_total, dtype=np.int64)
+    return ((k[:, None] // strides[None, :]) % np.asarray(num_stages)[None, :]).astype(
+        np.int32
+    )
+
+
+def ref_sojourn(
+    sizes,  # (N, M) padded cumulative sizes
+    probs,  # (N, M) padded stop probabilities
+    num_stages,  # (N,) stage counts
+    orders,  # (P, N) permutations
+    outcomes=None,  # optional (K, N) explicit outcome matrix
+    weights=None,  # optional (K,) combination weights
+):
+    """(E[sojourn successful], E[sojourn all]) per order, dense."""
+    sizes = jnp.asarray(sizes)
+    num_stages = np.asarray(num_stages)
+    n = sizes.shape[0]
+    if outcomes is None:
+        k_total = int(np.prod(num_stages, dtype=np.int64))
+        outcomes = ref_decode(num_stages, k_total)
+        weights = np.prod(
+            np.asarray(probs)[np.arange(n)[None, :], outcomes], axis=1
+        )
+    outcomes = jnp.asarray(outcomes)
+    weights = jnp.asarray(weights)
+    d = sizes[jnp.arange(n)[None, :], outcomes]  # (K, N)
+    succ = outcomes == jnp.asarray(num_stages)[None, :] - 1
+    cnt = jnp.sum(succ, axis=1)
+    e_succ, e_all = [], []
+    for order in np.asarray(orders):
+        t = jnp.cumsum(jnp.take(d, order, axis=1), axis=1)
+        tot = jnp.sum(t * jnp.take(succ, order, axis=1), axis=1)
+        mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), 0.0)
+        e_succ.append(jnp.dot(weights, mean))
+        e_all.append(jnp.dot(weights, jnp.mean(t, axis=1)))
+    return jnp.stack(e_succ), jnp.stack(e_all)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.parallel.sharding import shard_map  # version-compat shim
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.flash_attention.ops import flash_attention

@@ -19,7 +19,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.parallel.sharding import shard_map  # version-compat shim
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["quantize", "dequantize", "ef_compress", "compressed_psum"]

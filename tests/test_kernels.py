@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention

@@ -1,0 +1,246 @@
+"""Parity tests for the fused sojourn evaluator (repro.kernels.sojourn_eval).
+
+Acceptance bar from the paper repro plan: the fused op must match both the
+dense oracle (``ref.py``) and the seed materialized path
+(``evaluator._static_batch``) to <= 1e-9 *relative* error on paper-style
+workloads.  Everything runs on CPU: the Pallas kernels in interpret mode,
+the XLA streaming path compiled; both under x64.
+"""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import evaluator, policies
+from repro.core.jobs import JobSpec, generate_workload
+from repro.kernels.sojourn_eval import sojourn_eval
+from repro.kernels.sojourn_eval.ref import mixed_radix_strides, ref_decode, ref_sojourn
+
+RTOL = 1e-9
+IMPLS = ("xla", "interpret")
+
+
+def _orders(n, rng, p=6):
+    perms = np.array(list(itertools.permutations(range(n))), dtype=np.int32)
+    take = rng.choice(len(perms), size=min(p, len(perms)), replace=False)
+    return perms[take]
+
+
+def _ref(jobs, orders, outcomes=None, weights=None):
+    sizes, probs, num_stages = policies.padded_arrays(jobs)
+    with jax.experimental.enable_x64(True):
+        es, ea = ref_sojourn(
+            np.float64(sizes), np.float64(probs), num_stages, orders,
+            outcomes, weights,
+        )
+    return np.asarray(es), np.asarray(ea)
+
+
+def _relerr(a, b):
+    return np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-300))
+
+
+# ---------------------------------------------------------------------------
+# Decode / enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_radix_strides_match_meshgrid():
+    num_stages = np.array([2, 3, 2, 4])
+    k_total = int(np.prod(num_stages))
+    grids = np.meshgrid(*[np.arange(m) for m in num_stages], indexing="ij")
+    mesh = np.stack([g.reshape(-1) for g in grids], axis=1)
+    np.testing.assert_array_equal(ref_decode(num_stages, k_total), mesh)
+    strides = mixed_radix_strides(num_stages)
+    assert strides.tolist() == [24, 8, 4, 1]
+
+
+def test_enumerate_outcomes_vectorized_weights_sum_to_one():
+    rng = np.random.default_rng(0)
+    jobs = generate_workload(rng, 6, num_stages=3)
+    outcomes, weights = evaluator.enumerate_outcomes(jobs)
+    assert outcomes.shape == (3**6, 6)
+    np.testing.assert_allclose(weights.sum(), 1.0, rtol=1e-12)
+    # weights really are the product of per-job stop probabilities
+    _, probs, _ = policies.padded_arrays(jobs)
+    k = 137
+    expect = np.prod([probs[i, outcomes[k, i]] for i in range(6)])
+    np.testing.assert_allclose(weights[k], expect, rtol=1e-12)
+
+
+def test_sample_outcomes_vectorized_matches_distribution():
+    rng = np.random.default_rng(1)
+    jobs = generate_workload(rng, 4, num_stages=3)
+    outcomes, weights = evaluator.sample_outcomes(jobs, 200_000, rng)
+    assert outcomes.max() < 3 and outcomes.min() >= 0
+    np.testing.assert_allclose(weights.sum(), 1.0, rtol=1e-12)
+    _, probs, _ = policies.padded_arrays(jobs)
+    for i in range(4):
+        freq = np.bincount(outcomes[:, i], minlength=3) / len(outcomes)
+        np.testing.assert_allclose(freq, probs[i, :3], atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused op vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("n", range(2, 10))
+def test_enum_parity_vs_ref(impl, n):
+    rng = np.random.default_rng(n)
+    jobs = generate_workload(rng, n)  # paper default M=2
+    orders = _orders(n, rng)
+    es, ea = sojourn_eval_x64(jobs, orders, impl=impl)
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_enum_parity_ragged_stages(impl):
+    """Jobs with different checkpoint counts (padded M axis exercised)."""
+    rng = np.random.default_rng(7)
+    jobs = [
+        JobSpec(sizes=np.array([1.0, 2.5]), probs=np.array([0.3, 0.7])),
+        JobSpec(
+            sizes=np.array([0.5, 1.0, 4.0, 6.0]),
+            probs=np.array([0.1, 0.2, 0.3, 0.4]),
+        ),
+        JobSpec(sizes=np.array([2.0]), probs=np.array([1.0])),
+        JobSpec(
+            sizes=np.array([0.2, 0.9, 1.1]), probs=np.array([0.5, 0.25, 0.25])
+        ),
+    ]
+    orders = _orders(4, rng)
+    es, ea = sojourn_eval_x64(jobs, orders, impl=impl)
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_single_order_matches_batched(impl):
+    rng = np.random.default_rng(3)
+    jobs = generate_workload(rng, 5, num_stages=3)
+    orders = _orders(5, rng)
+    batched = evaluator.expected_sojourn_static(jobs, orders, impl=impl)
+    for i, order in enumerate(orders):
+        single = evaluator.expected_sojourn_static(jobs, order, impl=impl)
+        assert isinstance(single, float)
+        np.testing.assert_allclose(single, batched[i], rtol=RTOL)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_outcomes_mode_parity(impl):
+    """Explicit outcome tables (MC samples) through the fused op."""
+    rng = np.random.default_rng(5)
+    jobs = generate_workload(rng, 6, num_stages=3)
+    orders = _orders(6, rng)
+    outcomes, weights = evaluator.sample_outcomes(jobs, 3000, rng)
+    es, ea = sojourn_eval_x64(jobs, orders, outcomes=outcomes, weights=weights, impl=impl)
+    r_es, r_ea = _ref(jobs, orders, outcomes, weights)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+
+
+# ---------------------------------------------------------------------------
+# Fused op vs the seed materialized path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(4, 2), (6, 2), (5, 3), (8, 2), (3, 5)])
+def test_parity_vs_seed_static_batch(n, m):
+    rng = np.random.default_rng(n * 10 + m)
+    jobs = generate_workload(rng, n, num_stages=m)
+    orders = _orders(n, rng)
+    outcomes, weights = evaluator.enumerate_outcomes(jobs)
+    durations, success = evaluator._realized_arrays(jobs, outcomes)
+    with jax.experimental.enable_x64(True):
+        seed_es, seed_ea = evaluator._static_batch(
+            np.float64(durations), success, np.float64(weights), orders,
+            also_all_jobs=True,
+        )
+    seed_es, seed_ea = np.asarray(seed_es), np.asarray(seed_ea)
+    for impl in IMPLS:
+        es, ea = sojourn_eval_x64(jobs, orders, impl=impl)
+        assert _relerr(es, seed_es) < RTOL, impl
+        assert _relerr(ea, seed_ea) < RTOL, impl
+
+
+def test_evaluator_static_entry_uses_fused_path():
+    rng = np.random.default_rng(11)
+    jobs = generate_workload(rng, 7)
+    orders = _orders(7, rng)
+    vals = evaluator.expected_sojourn_static(jobs, orders)
+    r_es, _ = _ref(jobs, orders)
+    assert _relerr(np.asarray(vals), r_es) < RTOL
+
+
+# ---------------------------------------------------------------------------
+# Large-K capability (no (K, N) materialization)
+# ---------------------------------------------------------------------------
+
+
+def test_exact_beyond_materialization_cap():
+    """K = 2^22 > MAX_MATERIALIZED_COMBOS: enumerate_outcomes refuses but
+    the fused static path evaluates exactly, in bounded memory."""
+    rng = np.random.default_rng(13)
+    jobs = generate_workload(rng, 22)  # 2^22 combinations
+    assert evaluator.exact_combination_count(jobs) == 2**22
+    assert evaluator.MAX_EXACT_COMBOS >= 2**26
+    with pytest.raises(ValueError, match="MAX_MATERIALIZED_COMBOS"):
+        evaluator.enumerate_outcomes(jobs)
+    order = policies.rank_order(jobs)
+    val = evaluator.expected_sojourn_static(jobs, order)
+    assert np.isfinite(val) and val > 0
+    # cross-check against an independent MC estimate (loose tolerance)
+    mc_o, mc_w = evaluator.sample_outcomes(jobs, 20_000, rng)
+    mc = evaluator.expected_sojourn_static(jobs, order, outcomes=mc_o, weights=mc_w)
+    assert abs(mc - val) / val < 0.05
+
+
+def test_evaluate_many_tiering():
+    """Static policies stay exact past the materialization cap; dynamic
+    ones fall back to MC."""
+    rng = np.random.default_rng(17)
+    jobs = generate_workload(rng, 22)
+    res = evaluator.evaluate_many(jobs, ("rank", "sr"), rng, mc_samples=512)
+    assert set(res) == {"rank", "sr"}
+    exact = evaluator.expected_sojourn_static(jobs, policies.rank_order(jobs))
+    np.testing.assert_allclose(res["rank"], exact, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Workload-keyed cache
+# ---------------------------------------------------------------------------
+
+
+def test_workload_cache_hits_and_readonly():
+    rng = np.random.default_rng(19)
+    jobs = generate_workload(rng, 5)
+    a = policies.index_table(jobs, "sr")
+    b = policies.index_table(jobs, "sr")
+    assert a is b  # same workload content -> cached object
+    assert not a.flags.writeable
+    # equal content in *different* JobSpec objects also hits
+    clones = [
+        JobSpec(sizes=j.sizes.copy(), probs=j.probs.copy(), arrival=j.arrival)
+        for j in jobs
+    ]
+    assert policies.index_table(clones, "sr") is a
+    # different content misses
+    other = generate_workload(rng, 5)
+    assert policies.index_table(other, "sr") is not a
+
+
+def sojourn_eval_x64(jobs, orders, outcomes=None, weights=None, impl="xla"):
+    sizes, probs, num_stages = policies.padded_arrays(jobs)
+    with jax.experimental.enable_x64(True):
+        es, ea = sojourn_eval(
+            sizes, probs, num_stages, np.asarray(orders, np.int32),
+            outcomes=outcomes, weights=weights, impl=impl,
+        )
+    return np.asarray(es), np.asarray(ea)
