@@ -311,6 +311,82 @@ def table_eval_perf(full: bool = False):
     return rows
 
 
+def table_eval_dynamic(full: bool = False):
+    """Seed materialized lockstep vs the fused dynamic op (BENCH_eval_dynamic).
+
+    The seed design for SR/SERPT (``evaluator._dynamic_batch``) materializes
+    the (K, N) outcome/success tables host-side and simulates every
+    combination in a vmapped ``fori_loop``; the fused op
+    (``repro.kernels.sojourn_eval.dynamic``) decodes combinations on the
+    fly and simulates them inside streaming tiles.  Timed at K = 2**21
+    (the seed's materialization cap); ``--full`` adds SERPT and a
+    fused-only row at K = 2**26, beyond what the seed could represent.
+    """
+    import jax
+
+    from repro.core import evaluator, policies
+
+    def fused_time(jobs, policy, repeats):
+        ts = []
+        for _ in range(repeats + 1):  # first rep warms the jit cache
+            t0 = time.perf_counter()
+            val = evaluator.expected_sojourn_dynamic(jobs, policy, impl="xla")
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:])), val
+
+    def seed_time(jobs, policy, repeats):
+        idx_table = policies.index_table(jobs, policy)
+        stage_durs = policies.stage_durations(jobs)
+        _, _, num_stages = policies.padded_arrays(jobs)
+        ts = []
+        for _ in range(repeats + 1):
+            t0 = time.perf_counter()
+            # per-call work in the seed design: materialize + gather + jit
+            outcomes, weights = evaluator.enumerate_outcomes(jobs)
+            _, success = evaluator._realized_arrays(jobs, outcomes)
+            with jax.experimental.enable_x64(True):
+                val = float(evaluator._dynamic_batch(
+                    np.float64(idx_table), np.float64(stage_durs), outcomes,
+                    success, np.float64(weights), int(num_stages.sum()),
+                ))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:])), val
+
+    rows = []
+    rng = np.random.default_rng(37)
+    repeats = 2 if full else 1
+    policies_timed = ("sr", "serpt") if full else ("sr",)
+
+    n = 21  # M=2 -> K = 2**21, the materialization cap
+    jobs = generate_workload(rng, n)
+    for policy in policies_timed:
+        t_fused, v_fused = fused_time(jobs, policy, repeats)
+        t_seed, v_seed = seed_time(jobs, policy, repeats)
+        relerr = abs(v_fused - v_seed) / abs(v_seed)
+        assert relerr <= 1e-9, f"fused/seed divergence: {relerr}"
+        rows.append({
+            "k_combos": 1 << n, "n_jobs": n, "policy": policy,
+            "seed_s": t_seed, "fused_s": t_fused,
+            "speedup": t_seed / t_fused, "max_relerr_vs_seed": relerr,
+        })
+
+    if full:  # beyond the seed's representable range: fused only
+        n = 26
+        jobs = generate_workload(rng, n)
+        t_fused, _ = fused_time(jobs, "sr", 1)
+        rows.append({
+            "k_combos": 1 << n, "n_jobs": n, "policy": "sr",
+            "seed_s": None, "fused_s": t_fused,
+            "speedup": None, "max_relerr_vs_seed": None,
+        })
+
+    _save("BENCH_eval_dynamic", {
+        "rows": rows,
+        "workload_cache": policies.cache_stats(),
+    })
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Roofline aggregation (reads dry-run artifacts)
 # ---------------------------------------------------------------------------
@@ -356,6 +432,7 @@ TABLES = {
     "trace": table_trace,
     "faults": table_faults,
     "eval_perf": table_eval_perf,
+    "eval_dynamic": table_eval_dynamic,
     "roofline": lambda full=False: table_roofline(),
 }
 
@@ -380,6 +457,14 @@ def main() -> None:
         print(f"\n## {name}  ({dt:.1f}s)")
         if name != "roofline":  # roofline prints its own markdown
             print(_fmt(rows))
+
+    from repro.core import policies
+
+    stats = policies.cache_stats()
+    print(
+        f"\nworkload cache: {stats['hits']} hits / {stats['misses']} misses "
+        f"(hit rate {stats['hit_rate']:.1%}, {stats['entries']} entries)"
+    )
 
 
 if __name__ == "__main__":

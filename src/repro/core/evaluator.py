@@ -14,10 +14,14 @@ fused and vectorized:
   bounded memory; explicit outcome tables (Monte-Carlo samples or a
   shared exact table) ride the same op's streaming path.
 * :func:`expected_sojourn_dynamic` — stage-level policies (SR / SERPT /
-  conditional-RANK) simulated in lockstep across all outcome combinations
-  with a ``lax.fori_loop`` (single-server, simultaneous arrivals).  This
-  path still needs a materialized outcome table, capped at
-  ``MAX_MATERIALIZED_COMBOS``.
+  conditional-RANK) evaluated by the fused
+  :mod:`repro.kernels.sojourn_eval.dynamic` op, which decodes outcome
+  combinations on the fly and runs the single-server stage-boundary
+  preemption simulation *inside* each tile, so exact dynamic evaluation
+  also scales to ``MAX_EXACT_COMBOS`` with no outcome table.  Explicit
+  outcome tables (Monte-Carlo samples) ride the legacy
+  :func:`_dynamic_batch` lockstep simulation, which is retained as the
+  ``<= MAX_MATERIALIZED_COMBOS`` reference tier for differential tests.
 * :func:`optimal_order` — exhaustive search over permutations (N <= 9).
 * Monte-Carlo fallbacks for workloads whose combination count explodes.
 
@@ -44,7 +48,7 @@ import numpy as np
 
 from repro.core import policies
 from repro.core.jobs import Workload, pad_workload
-from repro.kernels.sojourn_eval import sojourn_eval
+from repro.kernels.sojourn_eval import sojourn_eval, sojourn_eval_dynamic
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
 
 __all__ = [
@@ -235,6 +239,11 @@ def expected_sojourn_static(
 def _dynamic_batch(idx_table, stage_durs, outcomes, success, weights, total_stages):
     """Simulate a stage-level index policy for every outcome combination.
 
+    Retained as the ``<= MAX_MATERIALIZED_COMBOS`` reference tier (and the
+    Monte-Carlo path) for the fused streaming op in
+    :mod:`repro.kernels.sojourn_eval.dynamic`; the differential suite
+    checks the two against each other and the dense oracle.
+
     idx_table:  (N, M)   priority after surviving s checkpoints (+inf pad)
     stage_durs: (N, M)   duration of executing checkpoint segment s
     outcomes:   (K, N)   stop-stage per combination
@@ -280,24 +289,44 @@ def expected_sojourn_dynamic(
     policy: str,
     outcomes: np.ndarray | None = None,
     weights: np.ndarray | None = None,
+    impl: str = "auto",
 ) -> float:
-    """Exact expected sojourn of successful jobs for a stage-level policy."""
-    if outcomes is None:
-        outcomes, weights = enumerate_outcomes(jobs)
-    _, _, num_stages = policies.padded_arrays(jobs)
+    """Exact expected sojourn of successful jobs for a stage-level policy.
+
+    With ``outcomes=None`` the evaluation is exact: all ``prod(M_i)``
+    combinations are decoded and *simulated* inside the fused dynamic
+    kernel (up to ``MAX_EXACT_COMBOS``, no (K, N) outcome table).
+    Passing explicit ``outcomes``/``weights`` (Monte-Carlo samples or a
+    shared exact table) runs the legacy materialized lockstep
+    simulation, retained as the reference tier.
+    """
+    _, probs, num_stages = policies.padded_arrays(jobs)
     idx_table = policies.index_table(jobs, policy)
     stage_durs = policies.stage_durations(jobs)
+    if outcomes is None:
+        k_total, _, _ = _enum_meta(jobs)
+        if k_total > MAX_EXACT_COMBOS:
+            raise ValueError(
+                f"{k_total} combinations exceed MAX_EXACT_COMBOS; use "
+                "sample_outcomes"
+            )
+        with _x64():
+            e_succ, _ = sojourn_eval_dynamic(
+                probs, stage_durs, num_stages, idx_table, impl=impl
+            )
+        return float(e_succ[0])
     _, success = _realized_arrays(jobs, outcomes)
     total_stages = int(num_stages.sum())
-    val = _dynamic_batch(
-        jnp.asarray(idx_table),
-        jnp.asarray(stage_durs),
-        jnp.asarray(outcomes),
-        jnp.asarray(success),
-        jnp.asarray(weights),
-        total_stages,
-    )
-    return float(val)
+    with _x64():
+        val = _dynamic_batch(
+            jnp.asarray(np.float64(idx_table)),
+            jnp.asarray(np.float64(stage_durs)),
+            jnp.asarray(outcomes),
+            jnp.asarray(success),
+            jnp.asarray(np.float64(weights)),
+            total_stages,
+        )
+        return float(val)
 
 
 # ---------------------------------------------------------------------------
@@ -355,30 +384,21 @@ def evaluate_many(
     rng: np.random.Generator,
     mc_samples: int = 4096,
 ) -> dict[str, float]:
-    """Evaluate several policies on one job group, sharing outcome tables.
+    """Evaluate several policies on one job group, sharing MC samples.
 
-    Three regimes by combination count K:
-      * K <= MAX_MATERIALIZED_COMBOS: one shared exact table for all
-        policies (static and dynamic).
-      * K <= MAX_EXACT_COMBOS: static orders stay *exact* via the fused
-        streaming kernel; dynamic policies (which need a materialized
-        table) fall back to shared Monte-Carlo samples.
-      * otherwise: Monte Carlo for everything.
+    Two regimes by combination count K (static *and* dynamic policies
+    now stream through fused kernels, so no policy ever needs a
+    materialized (K, N) outcome table for exactness):
+      * K <= MAX_EXACT_COMBOS: everything is exact — static orders via
+        :func:`repro.kernels.sojourn_eval.sojourn_eval`, SR/SERPT via
+        :func:`repro.kernels.sojourn_eval.sojourn_eval_dynamic`.
+      * otherwise: one shared Monte-Carlo sample table for everything.
     """
     k_total = exact_combination_count(jobs)
-    if k_total <= MAX_MATERIALIZED_COMBOS:
-        outcomes, weights = enumerate_outcomes(jobs)
-        return {
-            alg: evaluate(jobs, alg, rng=rng, outcomes=outcomes, weights=weights)
-            for alg in algs
-        }
-    mc: tuple[np.ndarray, np.ndarray] | None = None
-    out: dict[str, float] = {}
-    for alg in algs:
-        if alg in ("serpt", "sr") or k_total > MAX_EXACT_COMBOS:
-            if mc is None:
-                mc = sample_outcomes(jobs, mc_samples, rng)
-            out[alg] = evaluate(jobs, alg, rng=rng, outcomes=mc[0], weights=mc[1])
-        else:
-            out[alg] = evaluate(jobs, alg, rng=rng)
-    return out
+    if k_total <= MAX_EXACT_COMBOS:
+        return {alg: evaluate(jobs, alg, rng=rng) for alg in algs}
+    mc = sample_outcomes(jobs, mc_samples, rng)
+    return {
+        alg: evaluate(jobs, alg, rng=rng, outcomes=mc[0], weights=mc[1])
+        for alg in algs
+    }

@@ -32,6 +32,8 @@ from repro.core.jobs import JobSpec, Workload, pad_workload
 __all__ = [
     "workload_key",
     "workload_cached",
+    "cache_stats",
+    "reset_cache_stats",
     "padded_arrays",
     "stage_durations",
     "rank_values",
@@ -65,6 +67,9 @@ _INF = np.float64(np.inf)
 _CACHE_CAPACITY = 256
 _cache: OrderedDict[tuple[str, str], object] = OrderedDict()
 _cache_lock = threading.Lock()
+#: Hit/miss counters per derived-table kind (observability; see
+#: ``cache_stats`` and the benchmark harness, which surfaces them).
+_cache_stats: dict[str, list[int]] = {}
 
 
 def workload_key(jobs: Workload) -> str:
@@ -92,9 +97,12 @@ def workload_cached(kind: str, jobs: Workload, compute):
     """Memoize ``compute()`` under ``(kind, workload_key(jobs))``."""
     key = (kind, workload_key(jobs))
     with _cache_lock:
+        counters = _cache_stats.setdefault(kind, [0, 0])
         if key in _cache:
+            counters[0] += 1
             _cache.move_to_end(key)
             return _cache[key]
+        counters[1] += 1
     value = _freeze(compute())
     with _cache_lock:
         _cache[key] = value
@@ -107,6 +115,37 @@ def workload_cached(kind: str, jobs: Workload, compute):
 def clear_workload_cache() -> None:
     with _cache_lock:
         _cache.clear()
+
+
+def cache_stats() -> dict:
+    """Hit/miss counters of the workload-keyed cache since the last reset.
+
+    Returns ``{"hits": int, "misses": int, "hit_rate": float, "entries":
+    int, "by_kind": {kind: {"hits": int, "misses": int}}}`` — a snapshot
+    suitable for JSON artifacts (the benchmark harness attaches it to
+    its output so sweep-scale cache behavior is observable).
+    """
+    with _cache_lock:
+        by_kind = {
+            kind: {"hits": h, "misses": m}
+            for kind, (h, m) in sorted(_cache_stats.items())
+        }
+        hits = sum(h for h, _ in _cache_stats.values())
+        misses = sum(m for _, m in _cache_stats.values())
+        entries = len(_cache)
+    total = hits + misses
+    return {
+        "hits": hits,
+        "misses": misses,
+        "hit_rate": hits / total if total else 0.0,
+        "entries": entries,
+        "by_kind": by_kind,
+    }
+
+
+def reset_cache_stats() -> None:
+    with _cache_lock:
+        _cache_stats.clear()
 
 
 def padded_arrays(jobs: Workload) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

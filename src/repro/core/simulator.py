@@ -123,32 +123,33 @@ def simulate(
         dur = float(stage_durs[job, stage[job]]) + stage_overhead
         heapq.heappush(events, (now + dur, next(seq), 1, job))
 
+    # Events at the *same instant* are drained as one batch before any
+    # dispatch, so simultaneous arrivals (the paper's static setting: all
+    # jobs present at t=0) contend by policy index rather than by event
+    # order — the min-index job starts first, ties by job position,
+    # matching the exact evaluators' lockstep simulation.  At distinct
+    # timestamps (the trace studies) the behavior is unchanged.
     while events:
         now, _, kind, job = heapq.heappop(events)
         makespan = max(makespan, now)
-        if kind == 0:  # arrival
-            if free > 0:
-                free -= 1
-                start(job, now)
-            else:
+        batch = [(kind, job)]
+        while events and events[0][0] == now:
+            _, _, k2, j2 = heapq.heappop(events)
+            batch.append((k2, j2))
+        for kind, job in batch:
+            if kind == 0:  # arrival: contend for a server by index
                 ready.push(float(idx_table[job, stage[job]]), job)
-        else:  # stage completed
-            done_stage = stage[job]
-            stage[job] += 1
-            if done_stage == outcomes[job]:  # job finished (success or term.)
-                completion[job] = now
-                if len(ready):
-                    start(ready.pop(), now)
-                else:
-                    free += 1
-            else:  # job alive: compete with the queue at its new index
-                my_idx = float(idx_table[job, stage[job]])
-                if ready.peek_index() < my_idx:
-                    other = ready.pop()
-                    ready.push(my_idx, job)
-                    start(other, now)
-                else:
-                    start(job, now)
+            else:  # stage completed
+                done_stage = stage[job]
+                stage[job] += 1
+                free += 1
+                if done_stage == outcomes[job]:  # finished (success or term.)
+                    completion[job] = now
+                else:  # alive: re-compete with the queue at its new index
+                    ready.push(float(idx_table[job, stage[job]]), job)
+        while free > 0 and len(ready):
+            free -= 1
+            start(ready.pop(), now)
 
     success = outcomes == (num_stages - 1)
     sojourn = completion - arrivals

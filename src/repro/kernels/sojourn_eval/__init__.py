@@ -44,6 +44,18 @@ stage-major ``(SUBLANES, LANES)`` tiles.
 ("pallas" / "interpret" / tiled "xla" streaming fallback for CPU), and
 :mod:`repro.core.evaluator` rides it for ``expected_sojourn_static``,
 Monte-Carlo evaluation, and ``optimal_order``.
+
+Dynamic (stage-level) policies — SR / SERPT / conditional-RANK — stream
+through the same scheme via :mod:`repro.kernels.sojourn_eval.dynamic`:
+each tile decodes its combination indices with the identical mixed-radix
+rule, then runs the single-server stage-boundary preemption simulation
+*inside the tile*, selecting the minimum conditional index from the
+policy's precomputed ``(N, M)`` rank table at every stage completion
+(full design note in ``dynamic.py`` and ``docs/dynamic_sojourn_eval.md``).
+``evaluator.expected_sojourn_dynamic`` rides it, which lifts exact
+SR/SERPT evaluation from the materialized-table cap (2^21) to the same
+2^26 streaming bound as static orders.
 """
 
+from repro.kernels.sojourn_eval.dynamic import sojourn_eval_dynamic  # noqa: F401
 from repro.kernels.sojourn_eval.ops import sojourn_eval  # noqa: F401

@@ -1,0 +1,382 @@
+"""Fused dynamic-policy (SR / SERPT / conditional-RANK) sojourn evaluator.
+
+Kernel design note — in-tile lockstep simulation of index policies
+==================================================================
+
+The paper's stage-level policies (§III-A, §IV-V) re-rank jobs at every
+checkpoint: the single server always serves the alive job with the
+minimum *conditional* index, where SOAP-style (Scully & Harchol-Balter)
+the whole policy is described by its rank function — here a precomputed
+``(N, M)`` table ``idx[i, s]`` = job i's priority after surviving ``s``
+checkpoints (:func:`repro.core.policies.index_table`).  Exact evaluation
+(Eqs. 7-9) therefore needs, per outcome combination, a *simulation*
+rather than a prefix sum; the seed path (``evaluator._dynamic_batch``)
+runs that simulation over a fully materialized ``(K, N)`` outcome table
+and is capped at ``MAX_MATERIALIZED_COMBOS = 2**21``.
+
+These kernels lift the dynamic path to the same streaming scheme as the
+static ``sojourn_enum`` op — no ``(K, N)`` table anywhere, exact to
+``MAX_EXACT_COMBOS = 2**26``:
+
+* **Tile layout** — the grid is ``(P policies, ceil(K / BLOCK_COMBOS))``
+  with the combination axis innermost (sequential).  Each tile owns
+  ``BLOCK_COMBOS = 8 x 128`` combination indices as one
+  ``(SUBLANES, LANES)`` VPU tile and decodes the stop stage of every job
+  on the fly with the shared mixed-radix rule
+  ``stage_i(k) = (k // stride_i) % M_i`` (identical decoder and digit
+  order as the static kernel and ``enumerate_outcomes``).  The Eq.-8
+  weight ``w = prod_i p_{i, stage_i}`` is accumulated during the decode
+  via one-hot selects over the small stage axis; tail combinations
+  ``k >= K`` carry zero weight.
+
+* **In-tile index selection** — every lane then simulates its own
+  combination in lockstep over ``sum_i M_i`` server steps.  The per-lane
+  state is one current-stage register per job plus clock / sojourn
+  accumulators.  Each step (a ``fori_loop``) unrolls two passes over the
+  (static) job axis:
+
+  1. *select*: gather each alive job's conditional index
+     ``idx[j, stage_j]`` by one-hot select, and track the running
+     minimum with a strict ``<`` compare — ties break toward the lowest
+     job position, exactly matching ``jnp.argmin`` in
+     ``evaluator._dynamic_batch`` and the DES's arrival-order heap.
+     Done jobs contribute ``+inf``; if every job is done the sentinel
+     "best job" ``n`` matches nothing and the step is a no-op.
+  2. *advance*: the selected job executes one checkpoint segment
+     (``stage_durs[j, stage_j]``, again one-hot), the lane clock
+     advances, and if the segment reaches the decoded stop stage the
+     job's completion time is folded into the successful / all-job
+     sojourn accumulators (success == stopping at stage ``M_j - 1``).
+
+* **Reduction** — after the step loop the lane holds Eq. (7)'s mean
+  sojourn of successful jobs for its combination; the tile accumulates
+  ``w * mean`` into a VMEM scratch accumulator that persists across the
+  sequential combination tiles and is flushed on the last one — the
+  same tiled reduction as the static kernel.
+
+The XLA fallback (`_dynamic_enum_xla`) is the identical algorithm as a
+``lax.scan`` over combination tiles with the job axis vectorized
+(``(T, N)`` state, ``argmin`` selection); it is the default on CPU and
+the path the exact evaluator rides.  Both paths accumulate in the input
+dtype: float64 under ``jax.experimental.enable_x64`` (the <=1e-9 parity
+bar), float32 on real TPU grids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sojourn_eval import kernel as K
+from repro.kernels.sojourn_eval.ref import mixed_radix_strides
+
+__all__ = ["sojourn_eval_dynamic", "dynamic_sojourn_enum"]
+
+#: Combination indices per XLA scan tile (bounded-memory streaming).
+XLA_TILE = 1 << 15
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: per-tile lockstep simulation
+# ---------------------------------------------------------------------------
+
+
+def _dynamic_kernel(
+    strides_ref,  # (1, N) int32 SMEM mixed-radix strides (original job order)
+    radix_ref,  # (1, N) int32 SMEM stage counts M_i
+    probs_ref,  # (1, N, M) VMEM stop probabilities (0 pad)
+    durs_ref,  # (1, N, M) VMEM per-stage service increments (0 pad)
+    idx_ref,  # (1, N, M) VMEM this policy's index table (+inf pad)
+    succ_ref,  # (1, 1) out: E[sojourn | successful jobs]
+    all_ref,  # (1, 1) out: E[sojourn | all jobs]
+    acc_succ,  # (SUBLANES, LANES) VMEM scratch
+    acc_all,
+    *,
+    n: int,
+    m: int,
+    total_stages: int,
+    k_total: int,
+    nkt: int,
+):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_succ[...] = jnp.zeros_like(acc_succ)
+        acc_all[...] = jnp.zeros_like(acc_all)
+
+    dtype = acc_succ.dtype
+    shape = (K.SUBLANES, K.LANES)
+    k = K._tile_combo_ids(kt)
+    # Scalar tables, hoisted out of the step loop.
+    idx_s = [[idx_ref[0, j, s] for s in range(m)] for j in range(n)]
+    dur_s = [[durs_ref[0, j, s] for s in range(m)] for j in range(n)]
+
+    # --- decode: stop stage, success flag and Eq.-8 weight per lane -------
+    w = (k < k_total).astype(dtype)  # tail tiles carry zero weight
+    sdec, succ = [], []
+    for j in range(n):
+        radix = radix_ref[0, j]
+        s = (k // strides_ref[0, j]) % radix
+        p = jnp.zeros(shape, dtype)
+        for s_ in range(m):  # one-hot gather over the (small) stage axis
+            p = jnp.where(s == s_, probs_ref[0, j, s_], p)
+        w = w * p
+        sdec.append(s)
+        succ.append(s == radix - 1)
+
+    # --- lockstep single-server simulation (stage-boundary preemption) ---
+    inf = jnp.full(shape, jnp.inf, dtype)
+    zf = jnp.zeros(shape, dtype)
+    zi = jnp.zeros(shape, jnp.int32)
+
+    def step(_, carry):
+        stages, clock, tot, tsum, cnt = carry
+        # pass 1: running minimum of the alive jobs' conditional indices;
+        # strict < keeps the first minimum (ties by job position).
+        best = inf
+        bestj = jnp.full(shape, n, jnp.int32)  # sentinel: nothing alive
+        for j in range(n):
+            st = stages[j]
+            idx_j = inf
+            for s_ in range(m):
+                idx_j = jnp.where(st == s_, idx_s[j][s_], idx_j)
+            idx_j = jnp.where(st <= sdec[j], idx_j, inf)  # done -> +inf
+            better = idx_j < best
+            best = jnp.where(better, idx_j, best)
+            bestj = jnp.where(better, j, bestj)
+        # pass 2: advance the selected job one checkpoint segment.
+        dur = zf
+        fin_any = jnp.zeros(shape, jnp.bool_)
+        fin_succ = jnp.zeros(shape, jnp.bool_)
+        new_stages = []
+        for j in range(n):
+            sel = bestj == j
+            st = stages[j]
+            d_j = zf
+            for s_ in range(m):
+                d_j = jnp.where(st == s_, dur_s[j][s_], d_j)
+            dur = jnp.where(sel, d_j, dur)
+            fin_j = sel & (st == sdec[j])
+            fin_any = fin_any | fin_j
+            fin_succ = fin_succ | (fin_j & succ[j])
+            new_stages.append(st + sel.astype(jnp.int32))
+        clock = clock + dur
+        tot = jnp.where(fin_succ, tot + clock, tot)
+        cnt = cnt + fin_succ.astype(jnp.int32)
+        tsum = jnp.where(fin_any, tsum + clock, tsum)
+        return tuple(new_stages), clock, tot, tsum, cnt
+
+    init = (tuple(zi for _ in range(n)), zf, zf, zf, zi)
+    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, step, init)
+
+    # Eq. (7) mean over the successful jobs; Eq. (9) weighted reduction.
+    mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+    acc_succ[...] += w * mean
+    acc_all[...] += w * (tsum / n)
+
+    @pl.when(kt == nkt - 1)
+    def _finalize():
+        K._flush(succ_ref, all_ref, acc_succ, acc_all)
+
+
+def dynamic_sojourn_enum(
+    probs: jax.Array,  # (N, M) padded stop probabilities
+    stage_durs: jax.Array,  # (N, M) padded per-stage increments
+    idx_tables: jax.Array,  # (P, N, M) per-policy index tables (+inf pad)
+    strides: jax.Array,  # (N,) int32 mixed-radix strides
+    radix: jax.Array,  # (N,) int32 stage counts
+    k_total: int,
+    total_stages: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact (E[sojourn successful], E[sojourn all]) per policy, fused."""
+    p_pols, n, m = idx_tables.shape
+    nkt = max(1, pl.cdiv(k_total, K.BLOCK_COMBOS))
+    dtype = idx_tables.dtype
+    kernel = functools.partial(
+        _dynamic_kernel,
+        n=n,
+        m=m,
+        total_stages=total_stages,
+        k_total=k_total,
+        nkt=nkt,
+    )
+    out_succ, out_all = pl.pallas_call(
+        kernel,
+        grid=(p_pols, nkt),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda p, kt: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, m), lambda p, kt: (0, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (0, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pols, 1), dtype),
+            jax.ShapeDtypeStruct((p_pols, 1), dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((K.SUBLANES, K.LANES), dtype),
+            pltpu.VMEM((K.SUBLANES, K.LANES), dtype),
+        ],
+        interpret=interpret,
+    )(
+        strides.reshape(1, n),
+        radix.reshape(1, n),
+        probs.reshape(1, n, m),
+        stage_durs.reshape(1, n, m),
+        idx_tables,
+    )
+    return out_succ[:, 0], out_all[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# XLA streaming fallback: same algorithm, job axis vectorized
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("strides", "radix", "k_total", "tile", "total_stages"),
+)
+def _dynamic_enum_xla(
+    probs, stage_durs, idx_table, *, strides, radix, k_total, tile, total_stages
+):
+    """Exact fused dynamic evaluation for one policy; ``strides``/``radix``
+    are static tuples so the decode lowers to constant div/mod chains."""
+    n = probs.shape[0]
+    m = probs.shape[1]
+    dtype = probs.dtype
+    strides_a = jnp.asarray(strides, jnp.int32)[None, :]
+    radix_a = jnp.asarray(radix, jnp.int32)[None, :]
+    job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    n_tiles = max(1, -(-k_total // tile))
+    inf_row = jnp.full((tile, n), jnp.inf, dtype)
+
+    def tile_fn(carry, t):
+        e_succ, e_all = carry
+        k = t * tile + jnp.arange(tile, dtype=jnp.int32)
+        valid = k < k_total
+        s = (k[:, None] // strides_a) % radix_a  # (T, N) on-the-fly decode
+        w = jnp.prod(probs[job_ids, s], axis=1) * valid  # Eq. (8)
+        succ = s == radix_a - 1
+
+        def body(_, st):
+            stage, clock, tot, tsum, cnt = st
+            idx = inf_row
+            dur = jnp.zeros((tile, n), dtype)
+            for s_ in range(m):  # one-hot gather over the stage axis
+                hit = stage == s_
+                idx = jnp.where(hit, idx_table[None, :, s_], idx)
+                dur = jnp.where(hit, stage_durs[None, :, s_], dur)
+            alive = stage <= s
+            idx = jnp.where(alive, idx, jnp.inf)
+            j = jnp.argmin(idx, axis=1)  # first minimum: ties by position
+            sel = (j[:, None] == job_ids) & alive  # all-done lanes: no-op
+            clock = clock + jnp.sum(jnp.where(sel, dur, 0.0), axis=1)
+            fin = sel & (stage == s)
+            fin_any = jnp.any(fin, axis=1)
+            fin_succ = jnp.any(fin & succ, axis=1)
+            tot = tot + jnp.where(fin_succ, clock, 0.0)
+            cnt = cnt + fin_succ.astype(jnp.int32)
+            tsum = tsum + jnp.where(fin_any, clock, 0.0)
+            return stage + sel.astype(jnp.int32), clock, tot, tsum, cnt
+
+        zf = jnp.zeros((tile,), dtype)
+        init = (jnp.zeros((tile, n), jnp.int32), zf, zf, zf,
+                jnp.zeros((tile,), jnp.int32))
+        _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, body, init)
+        mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+        return (e_succ + jnp.dot(w, mean), e_all + jnp.dot(w, tsum / n)), None
+
+    zero = jnp.zeros((), dtype)
+    (e_succ, e_all), _ = jax.lax.scan(
+        tile_fn, (zero, zero), jnp.arange(n_tiles, dtype=jnp.int32)
+    )
+    return e_succ, e_all
+
+
+# ---------------------------------------------------------------------------
+# Public op
+# ---------------------------------------------------------------------------
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("xla", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto/xla/pallas/interpret")
+    return impl
+
+
+def sojourn_eval_dynamic(
+    probs: np.ndarray,  # (N, M) padded stop probabilities
+    stage_durs: np.ndarray,  # (N, M) padded per-stage increments
+    num_stages: np.ndarray,  # (N,) stage counts
+    idx_tables: np.ndarray,  # (P, N, M) or (N, M) policy index tables
+    *,
+    impl: str = "auto",
+) -> tuple[np.ndarray, np.ndarray]:
+    """(E[sojourn successful], E[sojourn all]) per policy; see module doc.
+
+    Evaluates all ``K = prod(M_i)`` outcome combinations exactly without
+    materializing them, simulating the stage-level index policy encoded
+    by each ``(N, M)`` table in ``idx_tables``.  Returns ``(P,)`` arrays
+    (pass a single ``(N, M)`` table for ``P = 1``).
+    """
+    impl = _resolve(impl)
+    probs = np.asarray(probs)
+    stage_durs = np.asarray(stage_durs)
+    num_stages = np.asarray(num_stages, dtype=np.int64)
+    idx_tables = np.asarray(idx_tables)
+    if idx_tables.ndim == 2:
+        idx_tables = idx_tables[None]
+    n, m = probs.shape
+    if idx_tables.shape[1:] != (n, m):
+        raise ValueError(
+            f"idx_tables must be (P, {n}, {m}); got {idx_tables.shape}"
+        )
+    strides = mixed_radix_strides(num_stages)
+    k_total = int(np.prod(num_stages, dtype=np.int64))
+    total_stages = int(num_stages.sum())
+    fdt = jnp.asarray(probs).dtype  # f64 under x64, else f32
+    if impl == "xla":
+        tile = min(XLA_TILE, max(K.BLOCK_COMBOS, 1 << (k_total - 1).bit_length()))
+        parts = [
+            _dynamic_enum_xla(
+                jnp.asarray(probs, fdt),
+                jnp.asarray(stage_durs, fdt),
+                jnp.asarray(table, fdt),
+                strides=tuple(int(s) for s in strides),
+                radix=tuple(int(r) for r in num_stages),
+                k_total=k_total,
+                tile=tile,
+                total_stages=total_stages,
+            )
+            for table in idx_tables
+        ]
+        e_succ = np.array([float(p[0]) for p in parts])
+        e_all = np.array([float(p[1]) for p in parts])
+        return e_succ, e_all
+    es, ea = dynamic_sojourn_enum(
+        jnp.asarray(probs, fdt),
+        jnp.asarray(stage_durs, fdt),
+        jnp.asarray(idx_tables, fdt),
+        jnp.asarray(strides, jnp.int32),
+        jnp.asarray(num_stages, jnp.int32),
+        k_total,
+        total_stages,
+        interpret=impl == "interpret",
+    )
+    return np.asarray(es), np.asarray(ea)

@@ -1,9 +1,16 @@
-"""Dense pure-jnp oracle for the fused sojourn evaluator.
+"""Dense oracles for the fused sojourn evaluators.
 
 Materializes the full ``(K, N)`` decoded outcome matrix (so it is only
 usable at small K) and evaluates every order against it with the exact
 math of the paper's Eqs. (7)-(9).  This is the parity reference for both
 the Pallas kernels and the tiled XLA path in ``ops.py``.
+
+``ref_sojourn_dynamic`` is the corresponding oracle for stage-level
+index policies (SR / SERPT / conditional-RANK): a deliberately naive
+per-combination Python simulation of single-server stage-boundary
+preemption, structured as a while-loop over server decisions so that it
+shares no code (and no bugs) with the vectorized lockstep paths it
+checks (``evaluator._dynamic_batch`` and ``dynamic.py``).
 """
 
 from __future__ import annotations
@@ -11,7 +18,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["mixed_radix_strides", "ref_decode", "ref_sojourn"]
+__all__ = [
+    "mixed_radix_strides",
+    "ref_decode",
+    "ref_sojourn",
+    "ref_sojourn_dynamic",
+]
 
 
 def mixed_radix_strides(num_stages: np.ndarray) -> np.ndarray:
@@ -61,3 +73,54 @@ def ref_sojourn(
         e_succ.append(jnp.dot(weights, mean))
         e_all.append(jnp.dot(weights, jnp.mean(t, axis=1)))
     return jnp.stack(e_succ), jnp.stack(e_all)
+
+
+def ref_sojourn_dynamic(
+    probs,  # (N, M) padded stop probabilities
+    stage_durs,  # (N, M) padded per-stage service increments
+    num_stages,  # (N,) stage counts
+    idx_table,  # (N, M) conditional index table (+inf pad)
+    outcomes=None,  # optional (K, N) explicit outcome matrix
+    weights=None,  # optional (K,) combination weights
+) -> tuple[float, float]:
+    """(E[sojourn successful], E[sojourn all]) for one index policy, dense.
+
+    Per combination: repeatedly serve the alive job with the minimum
+    conditional index (ties to the lowest job position) for one
+    checkpoint segment, until every job has stopped at its decoded
+    outcome stage.  Success == stopping at the last stage.
+    """
+    probs = np.asarray(probs, dtype=np.float64)
+    stage_durs = np.asarray(stage_durs, dtype=np.float64)
+    num_stages = np.asarray(num_stages)
+    idx_table = np.asarray(idx_table, dtype=np.float64)
+    n = len(num_stages)
+    if outcomes is None:
+        k_total = int(np.prod(num_stages, dtype=np.int64))
+        outcomes = ref_decode(num_stages, k_total)
+        weights = np.prod(
+            probs[np.arange(n)[None, :], outcomes], axis=1
+        )
+    e_succ = 0.0
+    e_all = 0.0
+    for outcome, w in zip(np.asarray(outcomes), np.asarray(weights)):
+        stage = [0] * n
+        done = [False] * n
+        completion = [0.0] * n
+        clock = 0.0
+        while not all(done):
+            best, best_j = np.inf, -1
+            for j in range(n):
+                if not done[j] and idx_table[j, stage[j]] < best:
+                    best, best_j = idx_table[j, stage[j]], j
+            clock += stage_durs[best_j, stage[best_j]]
+            if stage[best_j] == outcome[best_j]:
+                done[best_j] = True
+                completion[best_j] = clock
+            else:
+                stage[best_j] += 1
+        succ = [j for j in range(n) if outcome[j] == num_stages[j] - 1]
+        if succ:
+            e_succ += w * float(np.mean([completion[j] for j in succ]))
+        e_all += w * float(np.mean(completion))
+    return e_succ, e_all

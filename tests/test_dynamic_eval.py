@@ -1,0 +1,234 @@
+"""Parity suite for the fused dynamic-policy evaluator.
+
+Four mutually independent implementations of "exact expected sojourn of
+successful jobs under a stage-level index policy" must agree to <= 1e-9:
+
+1. the fused streaming op (``sojourn_eval_dynamic``), XLA scan path and
+   Pallas kernel in interpret mode;
+2. the seed materialized lockstep simulation (``evaluator._dynamic_batch``,
+   retained as the <= 2^21 reference tier);
+3. the dense pure-Python oracle (``ref.ref_sojourn_dynamic``);
+4. an exhaustive run of the discrete-event simulator
+   (``simulate(..., n_servers=1)``) over every enumerated outcome.
+
+Deterministic seeded cases run here unconditionally; the hypothesis
+property-based version lives in ``test_differential.py``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evaluator, policies, simulator
+from repro.core.jobs import JobSpec, generate_workload
+from repro.kernels.sojourn_eval import sojourn_eval_dynamic
+from repro.kernels.sojourn_eval.ref import ref_sojourn_dynamic
+
+RTOL = 1e-9
+IMPLS = ("xla", "interpret")
+POLICIES = ("sr", "serpt")
+
+
+def _relerr(a, b):
+    return abs(a - b) / max(abs(b), 1e-300)
+
+
+def _tables(jobs, policy):
+    _, probs, num_stages = policies.padded_arrays(jobs)
+    durs = policies.stage_durations(jobs)
+    idx = policies.index_table(jobs, policy)
+    return probs, durs, num_stages, idx
+
+
+def fused(jobs, policy, impl):
+    probs, durs, num_stages, idx = _tables(jobs, policy)
+    with jax.experimental.enable_x64(True):
+        es, ea = sojourn_eval_dynamic(probs, durs, num_stages, idx, impl=impl)
+    return float(es[0]), float(ea[0])
+
+
+def seed_batch(jobs, policy):
+    """The materialized reference tier, fed the enumerated exact table."""
+    probs, durs, num_stages, idx = _tables(jobs, policy)
+    outcomes, weights = evaluator.enumerate_outcomes(jobs)
+    _, success = evaluator._realized_arrays(jobs, outcomes)
+    with jax.experimental.enable_x64(True):
+        return float(
+            evaluator._dynamic_batch(
+                jnp.asarray(np.float64(idx)),
+                jnp.asarray(np.float64(durs)),
+                jnp.asarray(outcomes),
+                jnp.asarray(success),
+                jnp.asarray(np.float64(weights)),
+                int(num_stages.sum()),
+            )
+        )
+
+
+def oracle(jobs, policy):
+    probs, durs, num_stages, idx = _tables(jobs, policy)
+    return ref_sojourn_dynamic(probs, durs, num_stages, idx)
+
+
+def des_exhaustive(jobs, policy):
+    """Weight-average ``simulate(..., n_servers=1)`` over every outcome."""
+    outcomes, weights = evaluator.enumerate_outcomes(jobs)
+    total = 0.0
+    for outcome, w in zip(outcomes, weights):
+        fixed = [
+            dataclasses.replace(j, outcome_stage=int(s))
+            for j, s in zip(jobs, outcome)
+        ]
+        total += w * simulator.simulate(fixed, 1, policy).mean_sojourn_successful
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Four-way differential agreement (seeded; hypothesis version separately)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed,n,m", [(0, 3, 2), (1, 4, 3), (2, 5, 2), (3, 6, 3)])
+def test_four_way_agreement(policy, seed, n, m):
+    rng = np.random.default_rng(seed)
+    jobs = generate_workload(rng, n, num_stages=m)
+    ref_es, _ = oracle(jobs, policy)
+    batch = seed_batch(jobs, policy)
+    des = des_exhaustive(jobs, policy)
+    assert _relerr(batch, ref_es) < RTOL
+    assert _relerr(des, ref_es) < RTOL
+    for impl in IMPLS:
+        es, _ = fused(jobs, policy, impl)
+        assert _relerr(es, ref_es) < RTOL, (impl, es, ref_es)
+    # and the public evaluator entry rides the fused path
+    assert _relerr(evaluator.expected_sojourn_dynamic(jobs, policy), ref_es) < RTOL
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_four_way_agreement_ragged(policy):
+    """Ragged stage counts, a single-stage always-successful job, and a
+    zero-probability outcome row, through all four implementations."""
+    jobs = [
+        JobSpec(sizes=np.array([1.0, 2.5]), probs=np.array([0.3, 0.7])),
+        JobSpec(
+            sizes=np.array([0.5, 1.0, 4.0, 6.0]),
+            probs=np.array([0.1, 0.2, 0.3, 0.4]),
+        ),
+        JobSpec(sizes=np.array([2.0]), probs=np.array([1.0])),
+        JobSpec(sizes=np.array([0.2, 0.9, 1.1]), probs=np.array([0.0, 0.6, 0.4])),
+    ]
+    ref_es, _ = oracle(jobs, policy)
+    assert _relerr(seed_batch(jobs, policy), ref_es) < RTOL
+    assert _relerr(des_exhaustive(jobs, policy), ref_es) < RTOL
+    for impl in IMPLS:
+        es, _ = fused(jobs, policy, impl)
+        assert _relerr(es, ref_es) < RTOL, impl
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_policy_batch_matches_single(impl):
+    """A (P, N, M) stacked table call == per-policy calls."""
+    rng = np.random.default_rng(5)
+    jobs = generate_workload(rng, 5, num_stages=3)
+    probs, durs, num_stages, _ = _tables(jobs, "sr")
+    tabs = np.stack(
+        [np.asarray(policies.index_table(jobs, p)) for p in POLICIES]
+    )
+    with jax.experimental.enable_x64(True):
+        es_b, ea_b = sojourn_eval_dynamic(probs, durs, num_stages, tabs, impl=impl)
+        for i, p in enumerate(POLICIES):
+            es, ea = sojourn_eval_dynamic(
+                probs, durs, num_stages, tabs[i], impl=impl
+            )
+            np.testing.assert_allclose(es[0], es_b[i], rtol=RTOL)
+            np.testing.assert_allclose(ea[0], ea_b[i], rtol=RTOL)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fixed_priority_table_matches_static_order(impl):
+    """An index table constant over stages == the static order it encodes
+    (no preemption ever pays off), tying the dynamic kernel to the static
+    fused evaluator."""
+    rng = np.random.default_rng(7)
+    jobs = generate_workload(rng, 5, num_stages=2)
+    order = rng.permutation(5)
+    table = np.zeros((5, 2))
+    for pos, i in enumerate(order):
+        table[i, :] = pos
+    probs, durs, num_stages, _ = _tables(jobs, "sr")
+    with jax.experimental.enable_x64(True):
+        es, ea = sojourn_eval_dynamic(probs, durs, num_stages, table, impl=impl)
+    want = evaluator.expected_sojourn_static(jobs, order, also_all_jobs=True)
+    np.testing.assert_allclose(float(es[0]), float(want[0]), rtol=RTOL)
+    np.testing.assert_allclose(float(ea[0]), float(want[1]), rtol=RTOL)
+
+
+def test_multi_tile_grid_and_tail_masking():
+    """K = 3^7 = 2187 spans 3 combination tiles with a ragged tail."""
+    rng = np.random.default_rng(11)
+    jobs = generate_workload(rng, 7, num_stages=3)
+    ref_es, ref_ea = oracle(jobs, "serpt")
+    for impl in IMPLS:
+        es, ea = fused(jobs, "serpt", impl)
+        assert _relerr(es, ref_es) < RTOL, impl
+        assert _relerr(ea, ref_ea) < RTOL, impl
+
+
+def test_n1_single_job():
+    jobs = [JobSpec(sizes=np.array([1.0, 3.0]), probs=np.array([0.4, 0.6]))]
+    ref_es, ref_ea = oracle(jobs, "sr")
+    for impl in IMPLS:
+        es, ea = fused(jobs, "sr", impl)
+        assert _relerr(es, ref_es) < RTOL
+        assert _relerr(ea, ref_ea) < RTOL
+    # single job: E[sojourn | success] is its full size
+    np.testing.assert_allclose(ref_es, 0.6 * 3.0, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Tiering: exactness beyond the materialization cap
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_exact_beyond_materialization_cap():
+    """K = 2^22 > MAX_MATERIALIZED_COMBOS: enumerate_outcomes refuses, but
+    the fused dynamic path evaluates exactly in bounded memory, and
+    evaluate_many keeps SR exact instead of falling back to MC."""
+    rng = np.random.default_rng(13)
+    jobs = generate_workload(rng, 22)  # 2^22 combinations
+    assert evaluator.exact_combination_count(jobs) == 2**22
+    with pytest.raises(ValueError, match="MAX_MATERIALIZED_COMBOS"):
+        evaluator.enumerate_outcomes(jobs)
+    val = evaluator.expected_sojourn_dynamic(jobs, "sr")
+    assert np.isfinite(val) and val > 0
+    # cross-check against an independent MC estimate (loose tolerance)
+    mc_o, mc_w = evaluator.sample_outcomes(jobs, 20_000, rng)
+    mc = evaluator.expected_sojourn_dynamic(jobs, "sr", outcomes=mc_o, weights=mc_w)
+    assert abs(mc - val) / val < 0.05
+
+
+def test_dynamic_rejects_beyond_exact_cap():
+    rng = np.random.default_rng(17)
+    jobs = generate_workload(rng, 27)  # 2^27 > MAX_EXACT_COMBOS
+    with pytest.raises(ValueError, match="MAX_EXACT_COMBOS"):
+        evaluator.expected_sojourn_dynamic(jobs, "sr")
+
+
+def test_evaluate_many_all_exact_within_cap():
+    """At K <= MAX_EXACT_COMBOS no policy uses MC: repeated calls with
+    different rngs give identical values."""
+    rng = np.random.default_rng(19)
+    jobs = generate_workload(rng, 6, num_stages=3)
+    a = evaluator.evaluate_many(jobs, ("rank", "sr", "serpt"), np.random.default_rng(0))
+    b = evaluator.evaluate_many(jobs, ("rank", "sr", "serpt"), np.random.default_rng(1))
+    assert a == b
+    assert _relerr(a["sr"], oracle(jobs, "sr")[0]) < RTOL

@@ -71,3 +71,38 @@ def test_fifo_index_is_arrival_order():
     ]
     t = policies.fifo_index_table(jobs)
     assert t[1, 0] < t[0, 0]
+
+
+def test_cache_stats_counts_policy_trial_reuse():
+    """Observability counters: repeated policy/trial sweeps over the same
+    workload hit the workload-keyed cache instead of recomputing."""
+    rng = np.random.default_rng(42)
+    jobs = generate_workload(rng, 5)
+    policies.clear_workload_cache()
+    policies.reset_cache_stats()
+
+    policies.index_table(jobs, "sr")  # trial 1: computes (miss)
+    policies.index_table(jobs, "sr")  # trial 2: cached (hit)
+    policies.index_table(jobs, "sr")  # trial 3: cached (hit)
+    stats = policies.cache_stats()
+    assert stats["by_kind"]["idx_table:sr"] == {"hits": 2, "misses": 1}
+
+    # equal content in different JobSpec objects also hits
+    clones = [
+        JobSpec(sizes=j.sizes.copy(), probs=j.probs.copy(), arrival=j.arrival)
+        for j in jobs
+    ]
+    policies.index_table(clones, "sr")
+    stats = policies.cache_stats()
+    assert stats["by_kind"]["idx_table:sr"] == {"hits": 3, "misses": 1}
+    assert stats["hits"] >= 3 and stats["misses"] >= 1
+    assert 0.0 < stats["hit_rate"] < 1.0
+    assert stats["entries"] >= 1
+
+    # a different policy on the same workload is a distinct kind: miss
+    policies.index_table(jobs, "serpt")
+    assert policies.cache_stats()["by_kind"]["idx_table:serpt"]["misses"] == 1
+
+    policies.reset_cache_stats()
+    assert policies.cache_stats()["hits"] == 0
+    assert policies.cache_stats()["misses"] == 0

@@ -147,6 +147,70 @@ def test_outcomes_mode_parity(impl):
 
 
 # ---------------------------------------------------------------------------
+# Edge cases (interpret mode so the Pallas kernels run in CI)
+# ---------------------------------------------------------------------------
+
+
+def test_enum_parity_partial_tail_tile():
+    """K = 3^7 = 2187: two full (8x128) combination tiles plus a ragged
+    tail that must be weight-masked, not evaluated."""
+    rng = np.random.default_rng(23)
+    jobs = generate_workload(rng, 7, num_stages=3)
+    orders = _orders(7, rng, p=3)
+    es, ea = sojourn_eval_x64(jobs, orders, impl="interpret")
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+
+
+def test_enum_parity_n1():
+    """A single job: the only 'order' is the identity."""
+    jobs = [JobSpec(sizes=np.array([1.0, 3.0]), probs=np.array([0.4, 0.6]))]
+    orders = np.zeros((1, 1), dtype=np.int32)
+    es, ea = sojourn_eval_x64(jobs, orders, impl="interpret")
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    # E[sojourn | success] = p_succ * full size
+    np.testing.assert_allclose(es[0], 0.6 * 3.0, rtol=RTOL)
+    np.testing.assert_allclose(ea[0], 0.4 * 1.0 + 0.6 * 3.0, rtol=RTOL)
+
+
+def test_enum_parity_single_stage_jobs():
+    """Always-successful single-checkpoint jobs: K = 1 combination, every
+    job succeeds, and the padded stage axis degenerates to M = 1."""
+    jobs = [
+        JobSpec(sizes=np.array([2.0]), probs=np.array([1.0])),
+        JobSpec(sizes=np.array([0.5]), probs=np.array([1.0])),
+        JobSpec(sizes=np.array([1.25]), probs=np.array([1.0])),
+    ]
+    orders = np.array([[0, 1, 2], [2, 1, 0]], dtype=np.int32)
+    es, ea = sojourn_eval_x64(jobs, orders, impl="interpret")
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+    # deterministic: mean of the prefix sums
+    np.testing.assert_allclose(es[0], np.mean([2.0, 2.5, 3.75]), rtol=RTOL)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_enum_parity_zero_probability_row(impl):
+    """A job that can never stop early (p = 0 at an interior checkpoint):
+    combinations selecting that row carry zero weight and must not
+    contribute, even though their durations are still decoded."""
+    rng = np.random.default_rng(29)
+    jobs = [
+        JobSpec(sizes=np.array([1.0, 2.0]), probs=np.array([0.0, 1.0])),
+        JobSpec(sizes=np.array([0.5, 1.5, 3.0]), probs=np.array([0.2, 0.0, 0.8])),
+        JobSpec(sizes=np.array([1.0, 4.0]), probs=np.array([0.3, 0.7])),
+    ]
+    orders = _orders(3, rng)
+    es, ea = sojourn_eval_x64(jobs, orders, impl=impl)
+    r_es, r_ea = _ref(jobs, orders)
+    assert _relerr(es, r_es) < RTOL
+    assert _relerr(ea, r_ea) < RTOL
+
+
+# ---------------------------------------------------------------------------
 # Fused op vs the seed materialized path
 # ---------------------------------------------------------------------------
 
