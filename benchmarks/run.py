@@ -387,6 +387,118 @@ def table_eval_dynamic(full: bool = False):
     return rows
 
 
+def table_eval_mc(full: bool = False, smoke: bool = False):
+    """Streamed Monte Carlo vs the materialized sample-table path
+    (BENCH_eval_mc).
+
+    Beyond ``MAX_EXACT_COMBOS`` the evaluator estimates by Monte Carlo.
+    The materialized design (``sample_outcomes`` + the explicit-outcomes
+    op) builds the (S, N) sample table host-side every call, so the
+    sample count is bounded by host memory and the throughput by table
+    traffic; the streamed design (``samples=(seed, n_samples)``)
+    generates outcomes inside the evaluation tiles from the Threefry
+    counter stream and never materializes them.  Timed on a
+    K = 2**27 > MAX_EXACT_COMBOS workload: streamed at 2**23 samples vs
+    materialized at its practical 2**21 — the streamed path must be
+    >= 2x the throughput at 4x the samples.  A small-K control checks
+    the streamed estimate against the exact fused enumeration within
+    3-sigma CLT bounds (sigma replayed host-side from the same stream).
+
+    ``smoke`` (CI) shrinks sample counts and runs the Pallas kernels in
+    interpret mode instead of the compiled XLA path — a crash/parity
+    canary, not a performance measurement.
+    """
+    from repro.core import evaluator, policies
+    from repro.kernels.sojourn_eval.ref import ref_mc_outcomes
+
+    impl = "interpret" if smoke else "xla"
+    seed = 0x5EED
+    rng = np.random.default_rng(43)
+
+    # --- small-K control: streamed estimate vs exact, CLT bound ----------
+    ctrl_samples = 1 << (12 if smoke else 16)
+    ctrl_jobs = generate_workload(rng, 8)  # K = 256
+    order = policies.rank_order(ctrl_jobs)
+    exact = evaluator.expected_sojourn_static(ctrl_jobs, order, impl=impl)
+    est = evaluator.expected_sojourn_static(
+        ctrl_jobs, order, samples=(seed, ctrl_samples), impl=impl
+    )
+    sizes, probs, num_stages = policies.padded_arrays(ctrl_jobs)
+    outcomes, _ = ref_mc_outcomes(probs, num_stages, seed, ctrl_samples)
+    d = sizes[np.arange(len(ctrl_jobs))[None, :], outcomes]
+    succ = outcomes == num_stages[None, :] - 1
+    t = np.cumsum(d[:, order], axis=1)
+    cnt = succ.sum(axis=1)
+    vals = np.where(
+        cnt > 0, (t * succ[:, order]).sum(axis=1) / np.maximum(cnt, 1), 0.0
+    )
+    sigma = float(vals.std(ddof=1) / np.sqrt(ctrl_samples))
+    z = abs(est - exact) / sigma
+    assert z <= 3.0, f"streamed MC outside 3-sigma CLT bound: z={z}"
+    control = {
+        "k_combos": int(evaluator.exact_combination_count(ctrl_jobs)),
+        "n_samples": ctrl_samples, "exact": float(exact),
+        "streamed_est": float(est), "sigma": sigma, "z_score": float(z),
+    }
+
+    # --- throughput: K > MAX_EXACT_COMBOS, MC is the only option ---------
+    n = 27  # M=2 -> K = 2**27 > MAX_EXACT_COMBOS
+    jobs = generate_workload(rng, n)
+    orders = policies.rank_order(jobs)[None]
+    s_streamed = 1 << (12 if smoke else 23)
+    s_materialized = 1 << (10 if smoke else 21)
+    repeats = 1 if smoke else (3 if full else 2)
+
+    def streamed_time():
+        ts = []
+        for rep in range(repeats + 1):  # first rep warms the jit cache
+            t0 = time.perf_counter()
+            evaluator.expected_sojourn_static(
+                jobs, orders, samples=(seed + rep, s_streamed), impl=impl
+            )
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:]))
+
+    def materialized_time():
+        g = np.random.default_rng(seed)
+        ts = []
+        for _ in range(repeats + 1):
+            t0 = time.perf_counter()
+            # per-call work in the materialized design: host sampling of
+            # the (S, N) table, then the explicit-outcomes op
+            mc_o, mc_w = evaluator.sample_outcomes(jobs, s_materialized, g)
+            evaluator.expected_sojourn_static(
+                jobs, orders, outcomes=mc_o, weights=mc_w, impl=impl
+            )
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts[1:]))
+
+    t_streamed = streamed_time()
+    t_materialized = materialized_time()
+    tp_streamed = s_streamed / t_streamed
+    tp_materialized = s_materialized / t_materialized
+    row = {
+        "k_combos": 1 << n, "n_jobs": n,
+        "streamed_samples": s_streamed, "streamed_s": t_streamed,
+        "streamed_samples_per_s": tp_streamed,
+        "materialized_samples": s_materialized, "materialized_s": t_materialized,
+        "materialized_samples_per_s": tp_materialized,
+        "throughput_ratio": tp_streamed / tp_materialized,
+    }
+    if not smoke:
+        assert row["throughput_ratio"] >= 2.0, (
+            f"streamed MC below the 2x throughput bar: {row}"
+        )
+    _save("BENCH_eval_mc", {
+        "mode": "smoke" if smoke else ("full" if full else "default"),
+        "impl": impl,
+        "clt_control": control,
+        "rows": [row],
+        "workload_cache": policies.cache_stats(),
+    })
+    return [{**row, "control_z_score": control["z_score"]}]
+
+
 # ---------------------------------------------------------------------------
 # Roofline aggregation (reads dry-run artifacts)
 # ---------------------------------------------------------------------------
@@ -433,6 +545,7 @@ TABLES = {
     "faults": table_faults,
     "eval_perf": table_eval_perf,
     "eval_dynamic": table_eval_dynamic,
+    "eval_mc": table_eval_mc,
     "roofline": lambda full=False: table_roofline(),
 }
 
@@ -441,6 +554,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--table", default="all", choices=["all", *TABLES])
     ap.add_argument("--full", action="store_true", help="paper-scale trials")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sample counts + interpret-mode kernels "
+                         "(eval_mc only; CI crash canary)")
     args = ap.parse_args()
 
     names = list(TABLES) if args.table == "all" else [args.table]
@@ -451,6 +567,8 @@ def main() -> None:
             if shared_study is None:
                 shared_study = _numerical_study(args.full)
             rows = TABLES[name](args.full, study=shared_study)
+        elif name == "eval_mc":
+            rows = table_eval_mc(full=args.full, smoke=args.smoke)
         else:
             rows = TABLES[name](full=args.full)
         dt = time.perf_counter() - t0

@@ -23,7 +23,14 @@ fused and vectorized:
   :func:`_dynamic_batch` lockstep simulation, which is retained as the
   ``<= MAX_MATERIALIZED_COMBOS`` reference tier for differential tests.
 * :func:`optimal_order` — exhaustive search over permutations (N <= 9).
-* Monte-Carlo fallbacks for workloads whose combination count explodes.
+* Beyond ``MAX_EXACT_COMBOS``, both ops switch to *streaming* Monte
+  Carlo via ``samples=(seed, n_samples)``: outcomes are generated
+  inside the fused kernels from a counter-based Threefry stream keyed
+  by ``(seed, sample, job)``, so no (S, N) sample table is ever
+  materialized and all policies under one seed share identical outcome
+  streams (common random numbers; see ``docs/streaming_mc.md``).
+  :func:`sample_outcomes` + explicit tables remain as the legacy
+  materialized tier.
 
 Static-order evaluation runs under ``jax.experimental.enable_x64`` so the
 fused op accumulates in float64 (<=1e-9 agreement with the seed path).
@@ -48,6 +55,7 @@ import numpy as np
 
 from repro.core import policies
 from repro.core.jobs import Workload, pad_workload
+from repro.kernels.sojourn_eval import rng as kernel_rng
 from repro.kernels.sojourn_eval import sojourn_eval, sojourn_eval_dynamic
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
 
@@ -188,9 +196,9 @@ def expected_sojourn_static(
     orders: np.ndarray,
     outcomes: np.ndarray | None = None,
     weights: np.ndarray | None = None,
-    batch: int = 4096,
     also_all_jobs: bool = False,
     impl: str = "auto",
+    samples: tuple[int, int] | None = None,
 ):
     """Expected sojourn of successful jobs for static order(s), fused.
 
@@ -199,21 +207,23 @@ def expected_sojourn_static(
     combinations are enumerated *inside* the fused kernel (up to
     ``MAX_EXACT_COMBOS``, never materializing a (K, N) array).  Passing
     explicit ``outcomes``/``weights`` (Monte-Carlo samples or a shared
-    exact table) streams them through the same op.  ``batch`` is kept
-    for API compatibility; order batching now happens inside the op.
+    exact table) streams them through the same op.  Passing
+    ``samples=(seed, n_samples)`` instead runs *streaming* Monte Carlo:
+    outcomes are generated inside the op from the counter-based RNG
+    stream, so no (S, N) sample table is ever materialized and every
+    order/policy under one seed sees identical outcomes.
     """
-    del batch  # order batching lives in ops.sojourn_eval
     orders = np.asarray(orders, dtype=np.int32)
     single = orders.ndim == 1
     if single:
         orders = orders[None]
     sizes, probs, num_stages = policies.padded_arrays(jobs)
-    if outcomes is None:
+    if outcomes is None and samples is None:
         k_total, _, _ = _enum_meta(jobs)
         if k_total > MAX_EXACT_COMBOS:
             raise ValueError(
                 f"{k_total} combinations exceed MAX_EXACT_COMBOS; use "
-                "sample_outcomes"
+                "samples=(seed, n_samples) or sample_outcomes"
             )
     with _x64():
         e_succ, e_all = sojourn_eval(
@@ -223,6 +233,7 @@ def expected_sojourn_static(
             orders,
             outcomes=outcomes,
             weights=weights,
+            samples=samples,
             impl=impl,
         )
     if also_all_jobs:
@@ -290,25 +301,36 @@ def expected_sojourn_dynamic(
     outcomes: np.ndarray | None = None,
     weights: np.ndarray | None = None,
     impl: str = "auto",
+    samples: tuple[int, int] | None = None,
 ) -> float:
     """Exact expected sojourn of successful jobs for a stage-level policy.
 
     With ``outcomes=None`` the evaluation is exact: all ``prod(M_i)``
     combinations are decoded and *simulated* inside the fused dynamic
     kernel (up to ``MAX_EXACT_COMBOS``, no (K, N) outcome table).
-    Passing explicit ``outcomes``/``weights`` (Monte-Carlo samples or a
-    shared exact table) runs the legacy materialized lockstep
-    simulation, retained as the reference tier.
+    Passing ``samples=(seed, n_samples)`` runs streaming Monte Carlo
+    through the same fused op — outcomes are generated in-tile from the
+    counter-based RNG stream shared with the static op, so no (S, N)
+    table exists at any sample count.  Passing explicit
+    ``outcomes``/``weights`` (a materialized table) runs the legacy
+    lockstep simulation, retained as the reference tier.
     """
     _, probs, num_stages = policies.padded_arrays(jobs)
     idx_table = policies.index_table(jobs, policy)
     stage_durs = policies.stage_durations(jobs)
+    if samples is not None:
+        with _x64():
+            e_succ, _ = sojourn_eval_dynamic(
+                probs, stage_durs, num_stages, idx_table,
+                samples=samples, impl=impl,
+            )
+        return float(e_succ[0])
     if outcomes is None:
         k_total, _, _ = _enum_meta(jobs)
         if k_total > MAX_EXACT_COMBOS:
             raise ValueError(
                 f"{k_total} combinations exceed MAX_EXACT_COMBOS; use "
-                "sample_outcomes"
+                "samples=(seed, n_samples) or sample_outcomes"
             )
         with _x64():
             e_succ, _ = sojourn_eval_dynamic(
@@ -351,26 +373,34 @@ def evaluate(
     rng: np.random.Generator | None = None,
     outcomes: np.ndarray | None = None,
     weights: np.ndarray | None = None,
+    samples: tuple[int, int] | None = None,
 ) -> float:
     """Expected sojourn time of successful jobs under ``policy``.
 
     Policies: 'rank' | 'serpt' | 'sr' | 'random' | 'optimal'.
     RANK and RANDOM are static orders (Theorem III.1); SERPT and SR are
     stage-level index policies as in the paper's Section III-A examples.
+    ``samples=(seed, n_samples)`` runs streaming Monte Carlo with a
+    shared counter stream (common random numbers across policies).
     """
     if policy == "rank":
-        return expected_sojourn_static(jobs, policies.rank_order(jobs), outcomes, weights)
+        return expected_sojourn_static(
+            jobs, policies.rank_order(jobs), outcomes, weights, samples=samples
+        )
     if policy == "random":
         if rng is None:
             raise ValueError("random policy needs an rng")
         return expected_sojourn_static(
-            jobs, policies.random_order(jobs, rng), outcomes, weights
+            jobs, policies.random_order(jobs, rng), outcomes, weights,
+            samples=samples,
         )
     if policy == "optimal":
         _, val = optimal_order(jobs)
         return val
     if policy in ("serpt", "sr"):
-        return expected_sojourn_dynamic(jobs, policy, outcomes, weights)
+        return expected_sojourn_dynamic(
+            jobs, policy, outcomes, weights, samples=samples
+        )
     raise ValueError(f"unknown policy {policy!r}")
 
 
@@ -384,21 +414,25 @@ def evaluate_many(
     rng: np.random.Generator,
     mc_samples: int = 4096,
 ) -> dict[str, float]:
-    """Evaluate several policies on one job group, sharing MC samples.
+    """Evaluate several policies on one job group, sharing random numbers.
 
     Two regimes by combination count K (static *and* dynamic policies
-    now stream through fused kernels, so no policy ever needs a
-    materialized (K, N) outcome table for exactness):
+    stream through fused kernels, so no policy ever needs a materialized
+    (K, N) outcome table):
       * K <= MAX_EXACT_COMBOS: everything is exact — static orders via
         :func:`repro.kernels.sojourn_eval.sojourn_eval`, SR/SERPT via
         :func:`repro.kernels.sojourn_eval.sojourn_eval_dynamic`.
-      * otherwise: one shared Monte-Carlo sample table for everything.
+      * otherwise: *streaming* Monte Carlo with one seed drawn from
+        ``rng`` and shared by every policy (common random numbers) — the
+        counter-based stream is keyed by original job id, so all
+        policies see the identical outcome sequence without any (S, N)
+        sample table ever existing.
     """
     k_total = exact_combination_count(jobs)
     if k_total <= MAX_EXACT_COMBOS:
         return {alg: evaluate(jobs, alg, rng=rng) for alg in algs}
-    mc = sample_outcomes(jobs, mc_samples, rng)
+    seed = int(rng.integers(0, kernel_rng.MAX_SEED))
     return {
-        alg: evaluate(jobs, alg, rng=rng, outcomes=mc[0], weights=mc[1])
+        alg: evaluate(jobs, alg, rng=rng, samples=(seed, mc_samples))
         for alg in algs
     }

@@ -22,6 +22,9 @@ manager.
 from __future__ import annotations
 
 import hashlib
+import os
+import re
+import tempfile
 import threading
 from collections import OrderedDict
 
@@ -63,12 +66,19 @@ _INF = np.float64(np.inf)
 # digest of those bytes and compute each derived table once per workload.
 # Cached arrays are returned read-only; callers that need to mutate must
 # copy.
+#
+# Setting ``REPRO_CACHE_DIR`` additionally memoizes the tables on disk
+# (one ``.npz`` per (kind, workload) entry, written atomically), so
+# sweep processes launched repeatedly over the same workloads skip the
+# recomputation entirely.  Disk traffic has its own hit/miss counters,
+# folded into ``cache_stats`` only when the disk tier is exercised.
 
 _CACHE_CAPACITY = 256
 _cache: OrderedDict[tuple[str, str], object] = OrderedDict()
 _cache_lock = threading.Lock()
-#: Hit/miss counters per derived-table kind (observability; see
-#: ``cache_stats`` and the benchmark harness, which surfaces them).
+#: Counters per derived-table kind: [mem hits, mem misses, disk hits,
+#: disk misses] (observability; see ``cache_stats`` and the benchmark
+#: harness, which surfaces them).
 _cache_stats: dict[str, list[int]] = {}
 
 
@@ -93,17 +103,80 @@ def _freeze(value):
     return value
 
 
+def _disk_path(kind: str, digest: str) -> str | None:
+    """Disk-memo path for a cache entry, or None if the tier is off."""
+    root = os.environ.get("REPRO_CACHE_DIR")
+    if not root:
+        return None
+    safe = re.sub(r"[^A-Za-z0-9._-]", "_", kind)
+    return os.path.join(root, f"{safe}__{digest}.npz")
+
+
+def _disk_load(path: str):
+    """Load a memoized value; None if absent/unreadable (treated as miss)."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            items = [z[f"item_{i}"] for i in range(int(z["n_items"]))]
+            scalars = z["scalars"]
+            is_tuple = bool(z["is_tuple"])
+    except (OSError, KeyError, ValueError):
+        return None
+    items = [v.item() if s else v for v, s in zip(items, scalars)]
+    return tuple(items) if is_tuple else items[0]
+
+
+def _disk_store(path: str, value) -> None:
+    """Atomically persist an ndarray or flat tuple of ndarrays/scalars."""
+    items = value if isinstance(value, tuple) else (value,)
+    payload = {"is_tuple": isinstance(value, tuple), "n_items": len(items)}
+    scalars = []
+    for i, v in enumerate(items):
+        scalars.append(not isinstance(v, np.ndarray))
+        payload[f"item_{i}"] = np.asarray(v)
+    payload["scalars"] = np.asarray(scalars)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        suffix=".npz", prefix=".tmp_", dir=os.path.dirname(path) or "."
+    )
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
 def workload_cached(kind: str, jobs: Workload, compute):
-    """Memoize ``compute()`` under ``(kind, workload_key(jobs))``."""
-    key = (kind, workload_key(jobs))
+    """Memoize ``compute()`` under ``(kind, workload_key(jobs))``.
+
+    Two tiers: the in-process LRU, then (when ``REPRO_CACHE_DIR`` is
+    set) a cross-process disk memo of one ``.npz`` per entry.
+    """
+    digest = workload_key(jobs)
+    key = (kind, digest)
     with _cache_lock:
-        counters = _cache_stats.setdefault(kind, [0, 0])
+        counters = _cache_stats.setdefault(kind, [0, 0, 0, 0])
         if key in _cache:
             counters[0] += 1
             _cache.move_to_end(key)
             return _cache[key]
         counters[1] += 1
-    value = _freeze(compute())
+    path = _disk_path(kind, digest)
+    value = _disk_load(path) if path else None
+    if value is not None:
+        with _cache_lock:
+            counters[2] += 1
+        value = _freeze(value)
+    else:
+        if path:
+            with _cache_lock:
+                counters[3] += 1
+        value = _freeze(compute())
+        if path:
+            _disk_store(path, value)
     with _cache_lock:
         _cache[key] = value
         _cache.move_to_end(key)
@@ -123,24 +196,38 @@ def cache_stats() -> dict:
     Returns ``{"hits": int, "misses": int, "hit_rate": float, "entries":
     int, "by_kind": {kind: {"hits": int, "misses": int}}}`` — a snapshot
     suitable for JSON artifacts (the benchmark harness attaches it to
-    its output so sweep-scale cache behavior is observable).
+    its output so sweep-scale cache behavior is observable).  When the
+    ``REPRO_CACHE_DIR`` disk memo sees traffic, ``disk_hits`` /
+    ``disk_misses`` counters are folded in at top level and per kind
+    (in-memory misses that were served from disk count under both
+    ``misses`` and ``disk_hits``).
     """
     with _cache_lock:
-        by_kind = {
-            kind: {"hits": h, "misses": m}
-            for kind, (h, m) in sorted(_cache_stats.items())
-        }
-        hits = sum(h for h, _ in _cache_stats.values())
-        misses = sum(m for _, m in _cache_stats.values())
+        by_kind = {}
+        for kind, c in sorted(_cache_stats.items()):
+            h, m, dh, dm = c
+            entry = {"hits": h, "misses": m}
+            if dh or dm:
+                entry["disk_hits"] = dh
+                entry["disk_misses"] = dm
+            by_kind[kind] = entry
+        hits = sum(c[0] for c in _cache_stats.values())
+        misses = sum(c[1] for c in _cache_stats.values())
+        disk_hits = sum(c[2] for c in _cache_stats.values())
+        disk_misses = sum(c[3] for c in _cache_stats.values())
         entries = len(_cache)
     total = hits + misses
-    return {
+    stats = {
         "hits": hits,
         "misses": misses,
         "hit_rate": hits / total if total else 0.0,
         "entries": entries,
         "by_kind": by_kind,
     }
+    if disk_hits or disk_misses:
+        stats["disk_hits"] = disk_hits
+        stats["disk_misses"] = disk_misses
+    return stats
 
 
 def reset_cache_stats() -> None:
@@ -217,10 +304,20 @@ def random_order(jobs: Workload, rng: np.random.Generator) -> np.ndarray:
 
 
 def _conditional_arrays(jobs: Workload):
-    """Yield (i, s, rem_sizes, rem_probs) for every (job, survived-stage)."""
+    """Yield (i, s, rem_sizes, rem_probs) for every (job, survived-stage).
+
+    ``surv`` (the probability of surviving the first ``s`` checkpoints)
+    can round to <= 0 when the prefix mass sums to ~1 in float64; the
+    clamp below keeps the conditional distribution finite (it reduces
+    to the renormalized tail mass) instead of emitting inf/nan indices.
+    """
     for i, job in enumerate(jobs):
         for s in range(job.num_stages):
             surv = 1.0 - job.probs[:s].sum()
+            if surv <= 0.0:
+                surv = max(
+                    float(job.probs[s:].sum()), np.finfo(np.float64).tiny
+                )
             base = job.sizes[s - 1] if s > 0 else 0.0
             rem_sizes = job.sizes[s:] - base
             rem_probs = job.probs[s:] / surv
@@ -261,7 +358,11 @@ def rank_index_table(jobs: Workload) -> np.ndarray:
     m = max(j.num_stages for j in jobs)
     table = np.full((n, m), _INF)
     for i, s, rem_sizes, rem_probs in _conditional_arrays(jobs):
-        table[i, s] = float(np.dot(rem_sizes, rem_probs) / rem_probs[-1])
+        p_succ = rem_probs[-1]
+        if p_succ > 0.0:
+            table[i, s] = float(np.dot(rem_sizes, rem_probs) / p_succ)
+        # else: zero conditional success probability — the rank (Eq. 23)
+        # diverges, keep the +inf initialization rather than 0/0 = nan.
     return table
 
 

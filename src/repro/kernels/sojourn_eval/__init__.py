@@ -55,7 +55,18 @@ policy's precomputed ``(N, M)`` rank table at every stage completion
 ``evaluator.expected_sojourn_dynamic`` rides it, which lifts exact
 SR/SERPT evaluation from the materialized-table cap (2^21) to the same
 2^26 streaming bound as static orders.
+
+Beyond the exact cap, both ops take ``samples=(seed, n_samples)`` and
+switch to *streaming Monte Carlo*: outcomes are generated inside the
+tiles from a counter-based Threefry stream keyed by ``(seed, sample,
+job)`` (:mod:`repro.kernels.sojourn_eval.rng`) and an inverse-CDF
+search over the per-job stop-probability CDF, so no ``(S, N)`` sample
+table is ever materialized and every policy evaluated under one seed
+sees the identical outcome sequence (common random numbers; full design
+note in ``docs/streaming_mc.md``).
 """
+
+from repro.kernels.sojourn_eval.dynamic import dynamic_sojourn_mc  # noqa: F401
 
 from repro.kernels.sojourn_eval.dynamic import sojourn_eval_dynamic  # noqa: F401
 from repro.kernels.sojourn_eval.ops import sojourn_eval  # noqa: F401

@@ -73,9 +73,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.sojourn_eval import kernel as K
+from repro.kernels.sojourn_eval import rng
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
 
-__all__ = ["sojourn_eval_dynamic", "dynamic_sojourn_enum"]
+__all__ = ["sojourn_eval_dynamic", "dynamic_sojourn_enum", "dynamic_sojourn_mc"]
 
 #: Combination indices per XLA scan tile (bounded-memory streaming).
 XLA_TILE = 1 << 15
@@ -84,6 +85,63 @@ XLA_TILE = 1 << 15
 # ---------------------------------------------------------------------------
 # Pallas kernel: per-tile lockstep simulation
 # ---------------------------------------------------------------------------
+
+
+def _lockstep_sim(sdec, succ, idx_s, dur_s, *, n, m, total_stages, dtype):
+    """Shared in-tile lockstep single-server simulation.
+
+    Every lane simulates its own outcome combination (``sdec[j]`` = the
+    decoded stop stage of job ``j`` per lane, however it was produced —
+    mixed-radix enumeration or the Threefry MC stream) in lockstep over
+    ``total_stages`` server steps.  Returns per-lane ``(tot, tsum,
+    cnt)``: summed successful completion times, summed all-job
+    completion times, and the success count.
+    """
+    shape = (K.SUBLANES, K.LANES)
+    inf = jnp.full(shape, jnp.inf, dtype)
+    zf = jnp.zeros(shape, dtype)
+    zi = jnp.zeros(shape, jnp.int32)
+
+    def step(_, carry):
+        stages, clock, tot, tsum, cnt = carry
+        # pass 1: running minimum of the alive jobs' conditional indices;
+        # strict < keeps the first minimum (ties by job position).
+        best = inf
+        bestj = jnp.full(shape, n, jnp.int32)  # sentinel: nothing alive
+        for j in range(n):
+            st = stages[j]
+            idx_j = inf
+            for s_ in range(m):
+                idx_j = jnp.where(st == s_, idx_s[j][s_], idx_j)
+            idx_j = jnp.where(st <= sdec[j], idx_j, inf)  # done -> +inf
+            better = idx_j < best
+            best = jnp.where(better, idx_j, best)
+            bestj = jnp.where(better, j, bestj)
+        # pass 2: advance the selected job one checkpoint segment.
+        dur = zf
+        fin_any = jnp.zeros(shape, jnp.bool_)
+        fin_succ = jnp.zeros(shape, jnp.bool_)
+        new_stages = []
+        for j in range(n):
+            sel = bestj == j
+            st = stages[j]
+            d_j = zf
+            for s_ in range(m):
+                d_j = jnp.where(st == s_, dur_s[j][s_], d_j)
+            dur = jnp.where(sel, d_j, dur)
+            fin_j = sel & (st == sdec[j])
+            fin_any = fin_any | fin_j
+            fin_succ = fin_succ | (fin_j & succ[j])
+            new_stages.append(st + sel.astype(jnp.int32))
+        clock = clock + dur
+        tot = jnp.where(fin_succ, tot + clock, tot)
+        cnt = cnt + fin_succ.astype(jnp.int32)
+        tsum = jnp.where(fin_any, tsum + clock, tsum)
+        return tuple(new_stages), clock, tot, tsum, cnt
+
+    init = (tuple(zi for _ in range(n)), zf, zf, zf, zi)
+    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, step, init)
+    return tot, tsum, cnt
 
 
 def _dynamic_kernel(
@@ -131,51 +189,76 @@ def _dynamic_kernel(
         succ.append(s == radix - 1)
 
     # --- lockstep single-server simulation (stage-boundary preemption) ---
-    inf = jnp.full(shape, jnp.inf, dtype)
-    zf = jnp.zeros(shape, dtype)
-    zi = jnp.zeros(shape, jnp.int32)
-
-    def step(_, carry):
-        stages, clock, tot, tsum, cnt = carry
-        # pass 1: running minimum of the alive jobs' conditional indices;
-        # strict < keeps the first minimum (ties by job position).
-        best = inf
-        bestj = jnp.full(shape, n, jnp.int32)  # sentinel: nothing alive
-        for j in range(n):
-            st = stages[j]
-            idx_j = inf
-            for s_ in range(m):
-                idx_j = jnp.where(st == s_, idx_s[j][s_], idx_j)
-            idx_j = jnp.where(st <= sdec[j], idx_j, inf)  # done -> +inf
-            better = idx_j < best
-            best = jnp.where(better, idx_j, best)
-            bestj = jnp.where(better, j, bestj)
-        # pass 2: advance the selected job one checkpoint segment.
-        dur = zf
-        fin_any = jnp.zeros(shape, jnp.bool_)
-        fin_succ = jnp.zeros(shape, jnp.bool_)
-        new_stages = []
-        for j in range(n):
-            sel = bestj == j
-            st = stages[j]
-            d_j = zf
-            for s_ in range(m):
-                d_j = jnp.where(st == s_, dur_s[j][s_], d_j)
-            dur = jnp.where(sel, d_j, dur)
-            fin_j = sel & (st == sdec[j])
-            fin_any = fin_any | fin_j
-            fin_succ = fin_succ | (fin_j & succ[j])
-            new_stages.append(st + sel.astype(jnp.int32))
-        clock = clock + dur
-        tot = jnp.where(fin_succ, tot + clock, tot)
-        cnt = cnt + fin_succ.astype(jnp.int32)
-        tsum = jnp.where(fin_any, tsum + clock, tsum)
-        return tuple(new_stages), clock, tot, tsum, cnt
-
-    init = (tuple(zi for _ in range(n)), zf, zf, zf, zi)
-    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, step, init)
+    tot, tsum, cnt = _lockstep_sim(
+        sdec, succ, idx_s, dur_s, n=n, m=m, total_stages=total_stages,
+        dtype=dtype,
+    )
 
     # Eq. (7) mean over the successful jobs; Eq. (9) weighted reduction.
+    mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+    acc_succ[...] += w * mean
+    acc_all[...] += w * (tsum / n)
+
+    @pl.when(kt == nkt - 1)
+    def _finalize():
+        K._flush(succ_ref, all_ref, acc_succ, acc_all)
+
+
+def _dynamic_mc_kernel(
+    seed_ref,  # (1, 2) int32 SMEM: the two 31-bit Threefry key words
+    radix_ref,  # (1, N) int32 SMEM stage counts M_i
+    cdf_ref,  # (1, N, M) VMEM stop-probability CDF (cumsum of probs)
+    durs_ref,  # (1, N, M) VMEM per-stage service increments (0 pad)
+    idx_ref,  # (1, N, M) VMEM this policy's index table (+inf pad)
+    succ_ref,  # (1, 1) out
+    all_ref,  # (1, 1) out
+    acc_succ,
+    acc_all,
+    *,
+    n: int,
+    m: int,
+    total_stages: int,
+    n_samples: int,
+    nkt: int,
+):
+    """Streamed-MC variant: lanes own sample indices and decode each
+    job's stop stage from the Threefry counter stream instead of the
+    mixed-radix rule; the lockstep simulation is shared."""
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_succ[...] = jnp.zeros_like(acc_succ)
+        acc_all[...] = jnp.zeros_like(acc_all)
+
+    dtype = acc_succ.dtype
+    shape = (K.SUBLANES, K.LANES)
+    k = K._tile_combo_ids(kt)  # lanes own global sample indices
+    key = (seed_ref[0, 0].astype(jnp.uint32), seed_ref[0, 1].astype(jnp.uint32))
+    x0 = k.astype(jnp.uint32)
+    idx_s = [[idx_ref[0, j, s] for s in range(m)] for j in range(n)]
+    dur_s = [[durs_ref[0, j, s] for s in range(m)] for j in range(n)]
+
+    # Uniform MC weights; tail lanes (k >= S) are masked to zero.
+    w = (k < n_samples).astype(dtype) * (1.0 / n_samples)
+    sdec, succ = [], []
+    for j in range(n):
+        radix = radix_ref[0, j]
+        x1 = (jnp.zeros(shape, jnp.int32) + j).astype(jnp.uint32)
+        bits, _ = rng.threefry2x32(jnp, key, x0, x1)
+        u = rng.uniform_from_bits(bits, dtype)
+        scnt = jnp.zeros(shape, jnp.int32)
+        for s_ in range(m):  # inverse-CDF count, same compares as host
+            scnt = scnt + (u >= cdf_ref[0, j, s_]).astype(jnp.int32)
+        s = jnp.minimum(scnt, radix - 1)
+        sdec.append(s)
+        succ.append(s == radix - 1)
+
+    tot, tsum, cnt = _lockstep_sim(
+        sdec, succ, idx_s, dur_s, n=n, m=m, total_stages=total_stages,
+        dtype=dtype,
+    )
+
     mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
     acc_succ[...] += w * mean
     acc_all[...] += w * (tsum / n)
@@ -241,9 +324,105 @@ def dynamic_sojourn_enum(
     return out_succ[:, 0], out_all[:, 0]
 
 
+def dynamic_sojourn_mc(
+    cdf: jax.Array,  # (N, M) stop-probability CDF
+    stage_durs: jax.Array,  # (N, M) padded per-stage increments
+    idx_tables: jax.Array,  # (P, N, M) per-policy index tables (+inf pad)
+    radix: jax.Array,  # (N,) int32 stage counts
+    seed: int,
+    n_samples: int,
+    total_stages: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Streamed-MC (E[sojourn successful], E[sojourn all]) per policy."""
+    p_pols, n, m = idx_tables.shape
+    nkt = max(1, pl.cdiv(n_samples, K.BLOCK_COMBOS))
+    dtype = idx_tables.dtype
+    seed_arr = jnp.asarray([rng.split_seed(seed)], jnp.int32)  # (1, 2)
+    kernel = functools.partial(
+        _dynamic_mc_kernel,
+        n=n,
+        m=m,
+        total_stages=total_stages,
+        n_samples=n_samples,
+        nkt=nkt,
+    )
+    out_succ, out_all = pl.pallas_call(
+        kernel,
+        grid=(p_pols, nkt),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda p, kt: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, m), lambda p, kt: (0, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (0, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pols, 1), dtype),
+            jax.ShapeDtypeStruct((p_pols, 1), dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((K.SUBLANES, K.LANES), dtype),
+            pltpu.VMEM((K.SUBLANES, K.LANES), dtype),
+        ],
+        interpret=interpret,
+    )(
+        seed_arr,
+        radix.reshape(1, n),
+        cdf.reshape(1, n, m),
+        stage_durs.reshape(1, n, m),
+        idx_tables,
+    )
+    return out_succ[:, 0], out_all[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # XLA streaming fallback: same algorithm, job axis vectorized
 # ---------------------------------------------------------------------------
+
+
+def _sim_tile_xla(s, succ, idx_table, stage_durs, job_ids, *, m, total_stages):
+    """Shared per-tile lockstep simulation, job axis vectorized.
+
+    ``s`` is the (T, N) decoded stop-stage matrix for this tile (from
+    the mixed-radix rule or the Threefry MC stream); returns per-lane
+    ``(tot, tsum, cnt)`` as in :func:`_lockstep_sim`.
+    """
+    tile, n = s.shape
+    dtype = stage_durs.dtype
+    inf_row = jnp.full((tile, n), jnp.inf, dtype)
+
+    def body(_, st):
+        stage, clock, tot, tsum, cnt = st
+        idx = inf_row
+        dur = jnp.zeros((tile, n), dtype)
+        for s_ in range(m):  # one-hot gather over the stage axis
+            hit = stage == s_
+            idx = jnp.where(hit, idx_table[None, :, s_], idx)
+            dur = jnp.where(hit, stage_durs[None, :, s_], dur)
+        alive = stage <= s
+        idx = jnp.where(alive, idx, jnp.inf)
+        j = jnp.argmin(idx, axis=1)  # first minimum: ties by position
+        sel = (j[:, None] == job_ids) & alive  # all-done lanes: no-op
+        clock = clock + jnp.sum(jnp.where(sel, dur, 0.0), axis=1)
+        fin = sel & (stage == s)
+        fin_any = jnp.any(fin, axis=1)
+        fin_succ = jnp.any(fin & succ, axis=1)
+        tot = tot + jnp.where(fin_succ, clock, 0.0)
+        cnt = cnt + fin_succ.astype(jnp.int32)
+        tsum = tsum + jnp.where(fin_any, clock, 0.0)
+        return stage + sel.astype(jnp.int32), clock, tot, tsum, cnt
+
+    zf = jnp.zeros((tile,), dtype)
+    init = (jnp.zeros((tile, n), jnp.int32), zf, zf, zf,
+            jnp.zeros((tile,), jnp.int32))
+    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, body, init)
+    return tot, tsum, cnt
 
 
 @functools.partial(
@@ -262,7 +441,6 @@ def _dynamic_enum_xla(
     radix_a = jnp.asarray(radix, jnp.int32)[None, :]
     job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
     n_tiles = max(1, -(-k_total // tile))
-    inf_row = jnp.full((tile, n), jnp.inf, dtype)
 
     def tile_fn(carry, t):
         e_succ, e_all = carry
@@ -271,32 +449,53 @@ def _dynamic_enum_xla(
         s = (k[:, None] // strides_a) % radix_a  # (T, N) on-the-fly decode
         w = jnp.prod(probs[job_ids, s], axis=1) * valid  # Eq. (8)
         succ = s == radix_a - 1
+        tot, tsum, cnt = _sim_tile_xla(
+            s, succ, idx_table, stage_durs, job_ids, m=m,
+            total_stages=total_stages,
+        )
+        mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+        return (e_succ + jnp.dot(w, mean), e_all + jnp.dot(w, tsum / n)), None
 
-        def body(_, st):
-            stage, clock, tot, tsum, cnt = st
-            idx = inf_row
-            dur = jnp.zeros((tile, n), dtype)
-            for s_ in range(m):  # one-hot gather over the stage axis
-                hit = stage == s_
-                idx = jnp.where(hit, idx_table[None, :, s_], idx)
-                dur = jnp.where(hit, stage_durs[None, :, s_], dur)
-            alive = stage <= s
-            idx = jnp.where(alive, idx, jnp.inf)
-            j = jnp.argmin(idx, axis=1)  # first minimum: ties by position
-            sel = (j[:, None] == job_ids) & alive  # all-done lanes: no-op
-            clock = clock + jnp.sum(jnp.where(sel, dur, 0.0), axis=1)
-            fin = sel & (stage == s)
-            fin_any = jnp.any(fin, axis=1)
-            fin_succ = jnp.any(fin & succ, axis=1)
-            tot = tot + jnp.where(fin_succ, clock, 0.0)
-            cnt = cnt + fin_succ.astype(jnp.int32)
-            tsum = tsum + jnp.where(fin_any, clock, 0.0)
-            return stage + sel.astype(jnp.int32), clock, tot, tsum, cnt
+    zero = jnp.zeros((), dtype)
+    (e_succ, e_all), _ = jax.lax.scan(
+        tile_fn, (zero, zero), jnp.arange(n_tiles, dtype=jnp.int32)
+    )
+    return e_succ, e_all
 
-        zf = jnp.zeros((tile,), dtype)
-        init = (jnp.zeros((tile, n), jnp.int32), zf, zf, zf,
-                jnp.zeros((tile,), jnp.int32))
-        _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, body, init)
+
+@functools.partial(
+    jax.jit, static_argnames=("radix", "n_samples", "tile", "total_stages")
+)
+def _dynamic_mc_xla(
+    cdf, stage_durs, idx_table, key2, *, radix, n_samples, tile, total_stages
+):
+    """Streamed-MC dynamic evaluation for one policy: per-tile Threefry
+    outcome generation (identical counters and compares to the static op
+    and the host replay), then the shared lockstep simulation."""
+    n = cdf.shape[0]
+    m = cdf.shape[1]
+    dtype = cdf.dtype
+    radix_a = jnp.asarray(radix, jnp.int32)[None, :]
+    job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    n_tiles = max(1, -(-n_samples // tile))
+    x1 = jnp.broadcast_to(job_ids, (tile, n)).astype(jnp.uint32)
+
+    def tile_fn(carry, t):
+        e_succ, e_all = carry
+        k = t * tile + jnp.arange(tile, dtype=jnp.int32)
+        x0 = jnp.broadcast_to(k[:, None], (tile, n)).astype(jnp.uint32)
+        bits, _ = rng.threefry2x32(jnp, (key2[0], key2[1]), x0, x1)
+        u = rng.uniform_from_bits(bits, dtype)
+        s = jnp.minimum(
+            jnp.sum(u[:, :, None] >= cdf[None, :, :], axis=2).astype(jnp.int32),
+            radix_a - 1,
+        )
+        w = (k < n_samples).astype(dtype) * (1.0 / n_samples)
+        succ = s == radix_a - 1
+        tot, tsum, cnt = _sim_tile_xla(
+            s, succ, idx_table, stage_durs, job_ids, m=m,
+            total_stages=total_stages,
+        )
         mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
         return (e_succ + jnp.dot(w, mean), e_all + jnp.dot(w, tsum / n)), None
 
@@ -326,14 +525,20 @@ def sojourn_eval_dynamic(
     num_stages: np.ndarray,  # (N,) stage counts
     idx_tables: np.ndarray,  # (P, N, M) or (N, M) policy index tables
     *,
+    samples: tuple[int, int] | None = None,  # (seed, n_samples) streamed MC
     impl: str = "auto",
 ) -> tuple[np.ndarray, np.ndarray]:
     """(E[sojourn successful], E[sojourn all]) per policy; see module doc.
 
-    Evaluates all ``K = prod(M_i)`` outcome combinations exactly without
-    materializing them, simulating the stage-level index policy encoded
-    by each ``(N, M)`` table in ``idx_tables``.  Returns ``(P,)`` arrays
-    (pass a single ``(N, M)`` table for ``P = 1``).
+    With ``samples=None``, evaluates all ``K = prod(M_i)`` outcome
+    combinations exactly without materializing them, simulating the
+    stage-level index policy encoded by each ``(N, M)`` table in
+    ``idx_tables``.  With ``samples=(seed, n_samples)``, estimates the
+    same quantities by streaming Monte Carlo: outcomes are generated
+    in-tile from the counter-based Threefry stream (no ``(S, N)`` table
+    anywhere), bitwise identical to the static op's stream and the
+    ``ref.ref_mc_outcomes`` host replay for the same seed.  Returns
+    ``(P,)`` arrays (pass a single ``(N, M)`` table for ``P = 1``).
     """
     impl = _resolve(impl)
     probs = np.asarray(probs)
@@ -347,10 +552,47 @@ def sojourn_eval_dynamic(
         raise ValueError(
             f"idx_tables must be (P, {n}, {m}); got {idx_tables.shape}"
         )
-    strides = mixed_radix_strides(num_stages)
-    k_total = int(np.prod(num_stages, dtype=np.int64))
     total_stages = int(num_stages.sum())
     fdt = jnp.asarray(probs).dtype  # f64 under x64, else f32
+    if samples is not None:
+        seed, n_samples = int(samples[0]), int(samples[1])
+        if n_samples <= 0:
+            raise ValueError(f"n_samples must be positive; got {n_samples}")
+        cdf = np.cumsum(probs, axis=1)  # padded stages add 0 mass
+        if impl == "xla":
+            tile = min(
+                XLA_TILE, max(K.BLOCK_COMBOS, 1 << (n_samples - 1).bit_length())
+            )
+            key2 = jnp.asarray(rng.split_seed(seed), jnp.uint32)
+            parts = [
+                _dynamic_mc_xla(
+                    jnp.asarray(cdf, fdt),
+                    jnp.asarray(stage_durs, fdt),
+                    jnp.asarray(table, fdt),
+                    key2,
+                    radix=tuple(int(r) for r in num_stages),
+                    n_samples=n_samples,
+                    tile=tile,
+                    total_stages=total_stages,
+                )
+                for table in idx_tables
+            ]
+            e_succ = np.array([float(p[0]) for p in parts])
+            e_all = np.array([float(p[1]) for p in parts])
+            return e_succ, e_all
+        es, ea = dynamic_sojourn_mc(
+            jnp.asarray(cdf, fdt),
+            jnp.asarray(stage_durs, fdt),
+            jnp.asarray(idx_tables, fdt),
+            jnp.asarray(num_stages, jnp.int32),
+            seed,
+            n_samples,
+            total_stages,
+            interpret=impl == "interpret",
+        )
+        return np.asarray(es), np.asarray(ea)
+    strides = mixed_radix_strides(num_stages)
+    k_total = int(np.prod(num_stages, dtype=np.int64))
     if impl == "xla":
         tile = min(XLA_TILE, max(K.BLOCK_COMBOS, 1 << (k_total - 1).bit_length()))
         parts = [

@@ -23,6 +23,16 @@ in host NumPy (capping K at 2**21); these kernels never materialize it:
   VMEM in ``(SUBLANES, LANES)``-shaped tiles laid out stage-major, so
   the float duration/success matrices of the seed path are never built.
 
+* ``sojourn_mc`` — streaming Monte-Carlo: each grid tile owns
+  ``BLOCK_COMBOS`` *sample indices* and generates the per-job outcome
+  in-register from the counter-based Threefry stream
+  (:mod:`repro.kernels.sojourn_eval.rng`): ``(seed, sample, job)`` ->
+  uniform -> inverse-CDF count over the cached per-job CDF.  No
+  ``(S, N)`` sample table exists on host or device, and the counter is
+  keyed by *original* job id, so every order (and the dynamic op's
+  policies) evaluated under one seed sees the identical outcome stream
+  (common random numbers).
+
 Both kernels take per-*order* inputs (grid dim 0) whose job axis is
 pre-permuted by the caller (``ops.py``), so position ``pos`` in the
 kernel loop *is* service position: the running sum ``t`` after ``pos``
@@ -43,7 +53,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sojourn_enum", "sojourn_outcomes", "BLOCK_COMBOS", "SUBLANES", "LANES"]
+from repro.kernels.sojourn_eval import rng
+
+__all__ = [
+    "sojourn_enum",
+    "sojourn_outcomes",
+    "sojourn_mc",
+    "BLOCK_COMBOS",
+    "SUBLANES",
+    "LANES",
+]
 
 SUBLANES = 8  # float32 min sublane count
 LANES = 128  # TPU lane width
@@ -258,4 +277,115 @@ def sojourn_outcomes(
         ],
         interpret=interpret,
     )(orders, radix_p, sizes_p, outcomes_t, weights_t)
+    return out_succ[:, 0], out_all[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming Monte-Carlo mode: counter-based RNG outcome generation in-tile
+# ---------------------------------------------------------------------------
+
+
+def _mc_kernel(
+    seed_ref,  # (1, 2) int32 SMEM: the two 31-bit Threefry key words
+    order_ref,  # (1, N) int32 SMEM: original job id served at each position
+    radix_ref,  # (1, N) int32 SMEM, per-order permuted stage counts
+    sizes_ref,  # (1, N, M) VMEM, per-order permuted cumulative sizes
+    cdf_ref,  # (1, N, M) VMEM, per-order permuted stop-probability CDF
+    succ_ref,  # (1, 1) out
+    all_ref,  # (1, 1) out
+    acc_succ,
+    acc_all,
+    *,
+    n: int,
+    m: int,
+    n_samples: int,
+    nkt: int,
+):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_succ[...] = jnp.zeros_like(acc_succ)
+        acc_all[...] = jnp.zeros_like(acc_all)
+
+    dtype = acc_succ.dtype
+    k = _tile_combo_ids(kt)  # lanes own global sample indices
+    key = (seed_ref[0, 0].astype(jnp.uint32), seed_ref[0, 1].astype(jnp.uint32))
+    x0 = k.astype(jnp.uint32)
+    # Uniform MC weights; tail lanes (k >= S) are masked to zero.
+    w = (k < n_samples).astype(dtype) * (1.0 / n_samples)
+    t = jnp.zeros((SUBLANES, LANES), dtype)
+    tsum = jnp.zeros((SUBLANES, LANES), dtype)
+    tot = jnp.zeros((SUBLANES, LANES), dtype)
+    cnt = jnp.zeros((SUBLANES, LANES), jnp.int32)
+    for pos in range(n):
+        job = order_ref[0, pos]  # RNG counter keyed by ORIGINAL job id
+        radix = radix_ref[0, pos]
+        x1 = (jnp.zeros((SUBLANES, LANES), jnp.int32) + job).astype(jnp.uint32)
+        bits, _ = rng.threefry2x32(jnp, key, x0, x1)
+        u = rng.uniform_from_bits(bits, dtype)
+        # Inverse-CDF count, identical comparisons to the host replay.
+        scnt = jnp.zeros((SUBLANES, LANES), jnp.int32)
+        for j in range(m):
+            scnt = scnt + (u >= cdf_ref[0, pos, j]).astype(jnp.int32)
+        s = jnp.minimum(scnt, radix - 1)
+        d = jnp.zeros((SUBLANES, LANES), dtype)
+        for j in range(m):
+            d = jnp.where(s == j, sizes_ref[0, pos, j], d)
+        t = t + d
+        succ = s == radix - 1
+        tot = jnp.where(succ, tot + t, tot)
+        cnt = cnt + succ.astype(jnp.int32)
+        tsum = tsum + t
+    mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
+    acc_succ[...] += w * mean
+    acc_all[...] += w * (tsum / n)
+
+    @pl.when(kt == nkt - 1)
+    def _finalize():
+        _flush(succ_ref, all_ref, acc_succ, acc_all)
+
+
+def sojourn_mc(
+    sizes_p: jax.Array,  # (P, N, M) per-order permuted cumulative sizes
+    cdf_p: jax.Array,  # (P, N, M) per-order permuted stop-probability CDF
+    radix_p: jax.Array,  # (P, N) int32 permuted stage counts
+    orders: jax.Array,  # (P, N) int32 original job ids by position
+    seed: int,
+    n_samples: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Streamed-MC (E[sojourn successful], E[sojourn all]) per order."""
+    p_orders, n, m = sizes_p.shape
+    nkt = max(1, pl.cdiv(n_samples, BLOCK_COMBOS))
+    dtype = sizes_p.dtype
+    seed_arr = jnp.asarray([rng.split_seed(seed)], jnp.int32)  # (1, 2)
+    kernel = functools.partial(
+        _mc_kernel, n=n, m=m, n_samples=n_samples, nkt=nkt
+    )
+    out_succ, out_all = pl.pallas_call(
+        kernel,
+        grid=(p_orders, nkt),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda p, kt: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n), lambda p, kt: (p, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+            pl.BlockSpec((1, n, m), lambda p, kt: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, kt: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+            jax.ShapeDtypeStruct((p_orders, 1), dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+            pltpu.VMEM((SUBLANES, LANES), dtype),
+        ],
+        interpret=interpret,
+    )(seed_arr, orders, radix_p, sizes_p, cdf_p)
     return out_succ[:, 0], out_all[:, 0]

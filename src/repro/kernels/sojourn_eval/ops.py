@@ -11,7 +11,7 @@
   * "interpret" — the Pallas kernels interpreted on CPU (parity tests).
   * "auto"      — "pallas" on TPU backends, else "xla".
 
-Two entry modes, mirroring :mod:`repro.core.evaluator`'s two sources of
+Three entry modes, mirroring :mod:`repro.core.evaluator`'s sources of
 outcome combinations:
 
 * ``sojourn_eval(..., outcomes=None)`` — *exact enumeration*: evaluates
@@ -20,6 +20,15 @@ outcome combinations:
 * ``sojourn_eval(..., outcomes=, weights=)`` — *explicit outcomes*:
   Monte-Carlo samples or a shared exact table; the float duration and
   success matrices of the seed path are never built host-side.
+* ``sojourn_eval(..., samples=(seed, n_samples))`` — *streaming Monte
+  Carlo*: outcomes are generated inside the tiles from the counter-based
+  Threefry stream (:mod:`repro.kernels.sojourn_eval.rng`) and an
+  inverse-CDF search, so no ``(S, N)`` sample table exists on host or
+  device and sample counts are compute-bound rather than
+  table-memory-bound.  The stream is keyed by original job id: every
+  order/policy evaluated under one seed sees identical outcomes
+  (common random numbers), and ``ref.ref_mc_outcomes`` replays the
+  stream host-side bitwise for parity.
 
 Precision follows the ambient JAX x64 mode: the evaluator calls this op
 under ``jax.experimental.enable_x64`` so everything accumulates in
@@ -37,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.sojourn_eval import kernel as K
+from repro.kernels.sojourn_eval import rng
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
 
 __all__ = ["sojourn_eval"]
@@ -109,6 +119,51 @@ def _enum_xla(sizes, probs, orders, *, strides, radix, k_total, tile):
     return e_succ, e_all
 
 
+@functools.partial(jax.jit, static_argnames=("n_samples", "tile"))
+def _mc_xla(sizes, cdf, num_stages, orders, key2, *, n_samples, tile):
+    """Streamed-MC fused evaluation: per-tile Threefry outcome generation
+    with the same inverse-CDF count as the host replay, then the shared
+    prefix-sum reduction.  ``key2`` is a (2,) uint32 array (traced, so
+    sweeps over seeds do not recompile)."""
+    n = orders.shape[1]
+    job_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    n_tiles = max(1, -(-n_samples // tile))
+    x1 = jnp.broadcast_to(job_ids, (tile, n)).astype(jnp.uint32)
+
+    def tile_fn(carry, t):
+        e_succ, e_all = carry
+        k = t * tile + jnp.arange(tile, dtype=jnp.int32)
+        x0 = jnp.broadcast_to(k[:, None], (tile, n)).astype(jnp.uint32)
+        bits, _ = rng.threefry2x32(jnp, (key2[0], key2[1]), x0, x1)
+        u = rng.uniform_from_bits(bits, sizes.dtype)
+        s = jnp.minimum(
+            jnp.sum(u[:, :, None] >= cdf[None, :, :], axis=2).astype(jnp.int32),
+            num_stages[None, :] - 1,
+        )
+        w = (k < n_samples).astype(sizes.dtype) * (1.0 / n_samples)
+        d = sizes[job_ids, s]  # (T, N) realized durations
+        succ = s == num_stages[None, :] - 1
+        cnt = jnp.sum(succ, axis=1)
+        inv_cnt = jnp.where(cnt > 0, 1.0 / jnp.maximum(cnt, 1), 0.0)
+
+        def per_order(order):
+            tcum = jnp.cumsum(jnp.take(d, order, axis=1), axis=1)
+            tot = jnp.sum(tcum * jnp.take(succ, order, axis=1), axis=1)
+            return (
+                jnp.dot(w, tot * inv_cnt),
+                jnp.dot(w, jnp.mean(tcum, axis=1)),
+            )
+
+        des, dea = jax.vmap(per_order)(orders)
+        return (e_succ + des, e_all + dea), None
+
+    zeros = jnp.zeros((orders.shape[0],), sizes.dtype)
+    (e_succ, e_all), _ = jax.lax.scan(
+        tile_fn, (zeros, zeros), jnp.arange(n_tiles, dtype=jnp.int32)
+    )
+    return e_succ, e_all
+
+
 @jax.jit
 def _outcomes_xla(sizes, num_stages, outcomes, weights, orders):
     """Fused evaluation over an explicit outcome matrix: the duration and
@@ -167,10 +222,13 @@ def sojourn_eval(
     *,
     outcomes: np.ndarray | None = None,  # optional (K, N) explicit outcomes
     weights: np.ndarray | None = None,  # (K,) weights (required with outcomes)
+    samples: tuple[int, int] | None = None,  # (seed, n_samples) streamed MC
     impl: Impl = "auto",
 ) -> tuple[np.ndarray, np.ndarray]:
     """(E[sojourn successful], E[sojourn all]) per order; see module doc."""
     impl = _resolve(impl)
+    if samples is not None and outcomes is not None:
+        raise ValueError("samples= and outcomes= are mutually exclusive")
     sizes = np.asarray(sizes)
     probs = np.asarray(probs)
     num_stages = np.asarray(num_stages, dtype=np.int64)
@@ -185,7 +243,44 @@ def sojourn_eval(
 
     interpret = impl == "interpret"
     e_succ_parts, e_all_parts = [], []
-    if outcomes is None:
+    if samples is not None:
+        seed, n_samples = int(samples[0]), int(samples[1])
+        if n_samples <= 0:
+            raise ValueError(f"n_samples must be positive; got {n_samples}")
+        cdf = np.cumsum(probs, axis=1)  # padded stages add 0 mass
+        tile = min(
+            XLA_TILE, max(K.BLOCK_COMBOS, 1 << (n_samples - 1).bit_length())
+        )
+        pb = _order_batch(orders.shape[0], tile, n)
+        key2 = jnp.asarray(rng.split_seed(seed), jnp.uint32)
+        for lo in range(0, orders.shape[0], pb):
+            ob = orders[lo : lo + pb]
+            if impl == "xla":
+                es, ea = _mc_xla(
+                    sizes_j,
+                    jnp.asarray(cdf, fdt),
+                    jnp.asarray(num_stages, jnp.int32),
+                    jnp.asarray(ob),
+                    key2,
+                    n_samples=n_samples,
+                    tile=tile,
+                )
+            else:
+                sz_p, cdf_p, rx_p = _permuted(
+                    [sizes, cdf, num_stages.astype(np.int32)], ob
+                )
+                es, ea = K.sojourn_mc(
+                    jnp.asarray(sz_p, fdt),
+                    jnp.asarray(cdf_p, fdt),
+                    jnp.asarray(rx_p),
+                    jnp.asarray(ob),
+                    seed,
+                    n_samples,
+                    interpret=interpret,
+                )
+            e_succ_parts.append(np.asarray(es))
+            e_all_parts.append(np.asarray(ea))
+    elif outcomes is None:
         k_total = int(np.prod(num_stages, dtype=np.int64))
         tile = min(XLA_TILE, max(K.BLOCK_COMBOS, 1 << (k_total - 1).bit_length()))
         pb = _order_batch(orders.shape[0], tile, n)

@@ -11,6 +11,14 @@ per-combination Python simulation of single-server stage-boundary
 preemption, structured as a while-loop over server decisions so that it
 shares no code (and no bugs) with the vectorized lockstep paths it
 checks (``evaluator._dynamic_batch`` and ``dynamic.py``).
+
+``ref_mc_outcomes`` replays the streaming-Monte-Carlo counter stream
+host-side (NumPy Threefry, :mod:`repro.kernels.sojourn_eval.rng`) into
+a dense ``(S, N)`` outcome table: the streamed kernels decode the same
+``(seed, sample, job)`` counters in-tile, so evaluating this table with
+``ref_sojourn`` / ``ref_sojourn_dynamic`` is the oracle for the
+``samples=`` mode, and the table itself matches the in-kernel stream
+bitwise.
 """
 
 from __future__ import annotations
@@ -18,9 +26,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.sojourn_eval import rng
+
 __all__ = [
     "mixed_radix_strides",
     "ref_decode",
+    "ref_mc_outcomes",
     "ref_sojourn",
     "ref_sojourn_dynamic",
 ]
@@ -40,6 +51,23 @@ def ref_decode(num_stages: np.ndarray, k_total: int) -> np.ndarray:
     return ((k[:, None] // strides[None, :]) % np.asarray(num_stages)[None, :]).astype(
         np.int32
     )
+
+
+def ref_mc_outcomes(
+    probs: np.ndarray,  # (N, M) padded stop probabilities
+    num_stages: np.ndarray,  # (N,) stage counts
+    seed: int,
+    n_samples: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dense host replay of the streamed-MC outcome stream.
+
+    Returns ``(outcomes (S, N) int32, weights (S,) = 1/S)`` — bitwise
+    identical to the outcomes the streaming kernels decode in-tile for
+    the same ``(seed, n_samples)``.
+    """
+    outcomes = rng.host_outcomes(seed, n_samples, probs, num_stages)
+    weights = np.full((n_samples,), 1.0 / n_samples)
+    return outcomes, weights
 
 
 def ref_sojourn(
