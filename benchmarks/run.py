@@ -559,6 +559,14 @@ def main() -> None:
                          "(eval_mc only; CI crash canary)")
     args = ap.parse_args()
 
+    if args.full:
+        # Paper-scale sweeps revisit the same workloads across tables and
+        # reruns: persist the workload-keyed memo tier unless the user
+        # already pointed REPRO_CACHE_DIR somewhere.
+        from repro.core import policies as _policies
+
+        print(f"workload cache dir: {_policies.ensure_cache_dir()}")
+
     names = list(TABLES) if args.table == "all" else [args.table]
     shared_study = None
     for name in names:

@@ -18,6 +18,7 @@ import numpy as np
 from repro.cluster.faults import FaultConfig
 from repro.cluster.manager import ClusterManager, TrainingJob
 from repro.configs.registry import get_smoke
+from repro.core import policies
 from repro.core.jobs import JobSpec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.train import Trainer, default_plan
@@ -55,6 +56,9 @@ def main():
     ap.add_argument("--stages", type=int, default=3)
     ap.add_argument("--policy", default="rank", choices=["rank", "serpt", "sr", "fifo"])
     args = ap.parse_args()
+
+    # index/duration tables for repeated runs persist across invocations
+    policies.ensure_cache_dir()
 
     rng = np.random.default_rng(0)
     jobs = []

@@ -12,7 +12,12 @@ import numpy as np
 
 from repro.core.evaluator import evaluate, evaluate_many, optimal_order
 from repro.core.jobs import JobSpec, generate_workload
-from repro.core.policies import rank_values, sr_rank_values, erpt_values
+from repro.core.policies import (
+    ensure_cache_dir,
+    erpt_values,
+    rank_values,
+    sr_rank_values,
+)
 
 
 def worked_example():
@@ -43,5 +48,6 @@ def random_workload():
 
 
 if __name__ == "__main__":
+    ensure_cache_dir()  # persist workload tables across invocations
     worked_example()
     random_workload()

@@ -8,11 +8,13 @@ first-class framework feature:
   each stage boundary a metric gate (e.g. validation-loss plateau) decides
   whether the job continues — exactly the paper's multi-stage job model,
   with the size distribution estimated from historical jobs.
-* The :class:`ClusterManager` is a discrete-event loop over W servers
-  (mesh slices).  Scheduling follows the paper §V: jobs are held in a
-  priority queue keyed by their *conditional rank* (Eq. 23 updated on
-  survived stages); when a server finishes a stage, the served job
-  competes with the queue head.
+* Scheduling is the unified discrete-event engine
+  (:mod:`repro.core.des.engine`, shared with ``core/simulator.py``):
+  jobs are held in a priority queue keyed by their *conditional rank*
+  (Eq. 23 updated on survived stages); same-instant events are drained
+  as one batch before dispatch, so simultaneous arrivals contend by
+  policy index, and a job finishing a stage re-competes with the whole
+  queue at its new index (paper §V).
 * Fault tolerance: per-node exponential failures abort the affected
   job's in-flight stage; the job resumes **the same stage** from its last
   checkpoint (plus restart overhead) — failures never advance or
@@ -21,7 +23,9 @@ first-class framework feature:
   ``deadline_factor × EWMA`` is re-dispatched (duplicate-and-race, the
   winner counts).
 * Elastic scaling: ``resize(n_servers, at_time)`` events add/drain
-  servers at stage boundaries; the rank order is slice-width invariant.
+  servers; grow is immediate, shrink retires idle servers immediately
+  and busy ones at stage boundaries (including failure aborts), so
+  ``len(running) + free <= target_servers`` holds at every event.
 
 Jobs can be *simulated* (durations from the JobSpec — used for the
 paper-scale studies) or *real* (a runner callback executes actual jitted
@@ -31,14 +35,13 @@ train steps on this host — used by examples/cluster_train_small.py).
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import Callable
 
 import numpy as np
 
 from repro.cluster.faults import FaultConfig, FaultInjector
 from repro.core import policies
+from repro.core.des import ARRIVAL, FAILURE, RESIZE, Engine, SchedulerHooks
 from repro.core.jobs import JobSpec
 
 __all__ = ["TrainingJob", "ClusterManager", "ClusterResult"]
@@ -79,7 +82,52 @@ class ClusterResult:
     policy: str
 
 
-_ARRIVE, _STAGE_DONE, _FAILURE, _RESIZE = 0, 1, 2, 3
+class _ClusterHooks(SchedulerHooks):
+    """Fault / straggler / real-runner behavior on top of the engine."""
+
+    def __init__(self, mgr: "ClusterManager"):
+        self.mgr = mgr
+        self.ewma: float | None = None
+
+    def index(self, job: int, stage: int) -> float:
+        return float(self.mgr.idx_table[job, stage])
+
+    def stage_duration(self, job: int, stage: int, now: float) -> float:
+        mgr = self.mgr
+        dur = mgr._stage_nominal(job, stage)
+        if mgr.faults is not None:
+            dur, straggled = mgr.faults.stage_runtime(dur)
+            if self.ewma is not None and dur > mgr.faults.cfg.deadline_factor * self.ewma:
+                # duplicate-and-race: winner is the nominal re-dispatch
+                mgr.jobs[job].straggler_redispatches += 1
+                dur = min(dur, mgr._stage_nominal(job, stage))
+        self.ewma = dur if self.ewma is None else 0.9 * self.ewma + 0.1 * dur
+        return dur
+
+    def outcome(self, job: int) -> int:
+        # read at stage-completion time: a real runner's metric gate may
+        # have overridden the realized outcome while the stage ran
+        return int(self.mgr._outcomes[job])
+
+    def on_complete(self, job: int, now: float) -> None:
+        tj = self.mgr.jobs[job]
+        tj.completed = now
+        tj.success = self.mgr._outcomes[job] == tj.spec.num_stages - 1
+
+    def on_failure(self, engine: Engine, now: float) -> None:
+        mgr = self.mgr
+        if engine.pool.running:
+            # pick a random running job (gangs are node-disjoint)
+            job = list(engine.pool.running.keys())[mgr.rng.integers(engine.pool.busy)]
+            mgr.jobs[job].restarts += 1
+            # abort in-flight stage: the server frees (or drains, under a
+            # shrink) during the checkpoint-restore window; the job
+            # re-arrives at the same stage after the restart overhead
+            engine.abort(job)
+            engine.schedule(now + mgr.faults.cfg.restart_overhead, ARRIVAL, job)
+        if engine.n_done < engine.n_jobs:  # re-arm only while work remains
+            t_fail = mgr.faults.next_failure_time(now, mgr._total_nodes())
+            engine.schedule(t_fail, FAILURE)
 
 
 class ClusterManager:
@@ -111,8 +159,6 @@ class ClusterManager:
             [j.realized_stop_stage(self.rng) for j in jobs], dtype=np.int64
         )
 
-    # -- event helpers ---------------------------------------------------
-
     def _stage_nominal(self, j: int, stage: int) -> float:
         job = self.jobs[j]
         if job.runner is not None:
@@ -123,134 +169,32 @@ class ClusterManager:
             return float(wall)
         return float(self._stage_durs[j][stage])
 
-    def run(self) -> ClusterResult:
+    def run(self, observer=None) -> ClusterResult:
         jobs = self.jobs
         n = len(jobs)
-        seq = itertools.count()
-        events: list[tuple[float, int, int, int]] = [
-            (j.spec.arrival, next(seq), _ARRIVE, i) for i, j in enumerate(jobs)
-        ]
+        eng = Engine(n, self.n_servers, _ClusterHooks(self), observer=observer)
+        for i, j in enumerate(jobs):
+            eng.schedule(j.spec.arrival, ARRIVAL, i)
         for t, target in self.resize_events:
-            events.append((t, next(seq), _RESIZE, target))
-        heapq.heapify(events)
-
-        ready: list[tuple[float, int, int]] = []  # (index, seq, job)
-        free = self.n_servers
-        target_servers = self.n_servers
-        running: dict[int, int] = {}  # job -> dispatch epoch
-        epoch = itertools.count()
-        n_done = 0
-        ewma = None
-        makespan = 0.0
-        completion = np.full(n, np.nan)
-
+            eng.schedule(t, RESIZE, target)
         if self.faults is not None:
-            t_fail = self.faults.next_failure_time(0.0, self._total_nodes())
-            heapq.heappush(events, (t_fail, next(seq), _FAILURE, -1))
+            eng.schedule(self.faults.next_failure_time(0.0, self._total_nodes()), FAILURE)
+        eng.run()
 
-        def dispatch(j: int, now: float):
-            nonlocal ewma
-            job = jobs[j]
-            dur = self._stage_nominal(j, job.stage)
-            if self.faults is not None:
-                dur, straggled = self.faults.stage_runtime(dur)
-                if ewma is not None and dur > self.faults.cfg.deadline_factor * ewma:
-                    # duplicate-and-race: winner is the nominal re-dispatch
-                    job.straggler_redispatches += 1
-                    dur = min(dur, self._stage_nominal(j, job.stage))
-            ewma = dur if ewma is None else 0.9 * ewma + 0.1 * dur
-            ep = next(epoch)
-            running[j] = ep
-            heapq.heappush(events, (now + dur, next(seq), _STAGE_DONE, (j, ep)))
-
-        def push_ready(j: int):
-            heapq.heappush(
-                ready, (float(self.idx_table[j, jobs[j].stage]), next(seq), j)
-            )
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
-            if kind != _FAILURE:  # an armed-but-idle failure timer is not work
-                makespan = max(makespan, now)
-
-            if kind == _ARRIVE:
-                j = payload
-                if free > 0:
-                    free -= 1
-                    dispatch(j, now)
-                else:
-                    push_ready(j)
-
-            elif kind == _RESIZE:
-                target_servers = payload
-                grow = target_servers - (free + len(running))
-                if grow > 0:
-                    free += grow
-                    while free > 0 and ready:
-                        free -= 1
-                        dispatch(heapq.heappop(ready)[2], now)
-                # shrink: drain at stage boundaries (handled in _STAGE_DONE)
-
-            elif kind == _FAILURE:
-                # pick a random running job (gangs are node-disjoint)
-                if running:
-                    j = list(running.keys())[self.rng.integers(len(running))]
-                    jobs[j].restarts += 1
-                    # abort in-flight stage: re-dispatch same stage after
-                    # restart overhead (checkpoint restore)
-                    del running[j]
-                    overhead = self.faults.cfg.restart_overhead
-                    heapq.heappush(
-                        events, (now + overhead, next(seq), _ARRIVE, j)
-                    )
-                    free += 1  # server freed during restore window
-                    if ready and free > 0:
-                        free -= 1
-                        dispatch(heapq.heappop(ready)[2], now)
-                if n_done < n:  # re-arm only while work remains
-                    t_fail = self.faults.next_failure_time(now, self._total_nodes())
-                    heapq.heappush(events, (t_fail, next(seq), _FAILURE, -1))
-
-            else:  # _STAGE_DONE
-                j, ep = payload
-                if running.get(j) != ep:
-                    continue  # stale event (job was failed/re-dispatched)
-                del running[j]
-                job = jobs[j]
-                done_stage = job.stage
-                job.stage += 1
-                busy = len(running)
-                if done_stage == self._outcomes[j]:  # job finished
-                    completion[j] = now
-                    job.completed = now
-                    job.success = done_stage == job.spec.num_stages - 1
-                    n_done += 1
-                    if busy + free + 1 > target_servers:  # drain (shrink)
-                        pass
-                    elif ready:
-                        dispatch(heapq.heappop(ready)[2], now)
-                    else:
-                        free += 1
-                else:  # alive: compete with queue head (paper §V)
-                    my_idx = float(self.idx_table[j, job.stage])
-                    if ready and ready[0][0] < my_idx:
-                        other = heapq.heappop(ready)[2]
-                        push_ready(j)
-                        dispatch(other, now)
-                    else:
-                        dispatch(j, now)
+        for i, j in enumerate(jobs):  # expose per-job progress post-run
+            j.stage = int(eng.stage[i])
 
         arrivals = np.array([j.spec.arrival for j in jobs])
         success = np.array(
             [self._outcomes[i] == jobs[i].spec.num_stages - 1 for i in range(n)]
         )
-        sojourn = completion - arrivals
+        sojourn = eng.completion - arrivals
         return ClusterResult(
             mean_sojourn_successful=float(sojourn[success].mean()) if success.any() else 0.0,
             mean_sojourn_all=float(np.nanmean(sojourn)),
             n_success=int(success.sum()),
             n_jobs=n,
-            makespan=float(makespan),
+            makespan=float(eng.makespan),
             restarts=sum(j.restarts for j in jobs),
             straggler_redispatches=sum(j.straggler_redispatches for j in jobs),
             policy=self.policy,

@@ -1,0 +1,12 @@
+"""Unified discrete-event scheduling engine (see docs/des_engine.md)."""
+
+from repro.core.des.engine import (  # noqa: F401
+    ARRIVAL,
+    FAILURE,
+    RESIZE,
+    STAGE_DONE,
+    Engine,
+    ReadyQueue,
+    ServerPool,
+)
+from repro.core.des.hooks import SchedulerHooks  # noqa: F401

@@ -1,0 +1,215 @@
+"""Unified discrete-event engine for the online multi-server setting.
+
+One event loop serves both frontends (paper §V–VI):
+
+* :func:`repro.core.simulator.simulate` — the trace-study DES;
+* :class:`repro.cluster.manager.ClusterManager` — faults, stragglers,
+  elastic resize, real training jobs.
+
+Semantics (the ones the fused lockstep evaluators in
+:mod:`repro.kernels.sojourn_eval` replicate exactly):
+
+* **Same-instant batch draining.**  All events with equal timestamps are
+  drained as one batch *before* any dispatch, so simultaneous arrivals
+  (the paper's static setting: all jobs present at t=0) contend by
+  policy index rather than by event order; ties break by job position.
+* **Stage-boundary preemption.**  A job that completes a stage and
+  stays alive releases its server and re-competes with the whole ready
+  queue at its updated conditional index (not just the queue head).
+* **Drain-aware server pool.**  Elastic shrink retires servers at stage
+  boundaries; every release path (stage completion *and* failure abort)
+  checks the target, so ``len(running) + free <= target`` holds at every
+  event and no server is leaked or double-freed.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+from repro.core.des.hooks import SchedulerHooks
+
+__all__ = [
+    "ARRIVAL",
+    "STAGE_DONE",
+    "FAILURE",
+    "RESIZE",
+    "ReadyQueue",
+    "ServerPool",
+    "Engine",
+]
+
+# Event kinds.  ARRIVAL / re-arrival payload: job id.  STAGE_DONE payload:
+# (job, epoch).  FAILURE payload: ignored.  RESIZE payload: new target.
+ARRIVAL, STAGE_DONE, FAILURE, RESIZE = 0, 1, 2, 3
+
+
+class ReadyQueue:
+    """Priority queue of waiting jobs keyed by policy index (min first).
+
+    Queued jobs never change stage, so indices never go stale; O(log N)
+    push/pop as noted in the paper's Section V.  Ties break by insertion
+    order, i.e. by job position for same-batch arrivals.
+    """
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, int]] = []
+        self._seq = itertools.count()
+
+    def push(self, index: float, job: int) -> None:
+        heapq.heappush(self._heap, (index, next(self._seq), job))
+
+    def pop(self) -> int:
+        return heapq.heappop(self._heap)[2]
+
+    def peek_index(self) -> float:
+        return self._heap[0][0] if self._heap else np.inf
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class ServerPool:
+    """W homogeneous servers with elastic resize and drain-at-boundary.
+
+    ``len(running) + free <= target`` is an invariant at every event:
+    grow adds free servers immediately; shrink retires idle servers
+    immediately and busy ones as they release (stage completion or
+    failure abort).
+    """
+
+    def __init__(self, n_servers: int):
+        self.free = n_servers
+        self.target = n_servers
+        self.running: dict[int, int] = {}  # job -> dispatch epoch
+        self._epoch = itertools.count()
+
+    @property
+    def busy(self) -> int:
+        return len(self.running)
+
+    def acquire(self, job: int) -> int:
+        """Seize a free server for ``job``; returns the dispatch epoch."""
+        if self.free <= 0:
+            raise RuntimeError("acquire with no free server")
+        if job in self.running:
+            raise RuntimeError(f"job {job} dispatched twice")
+        self.free -= 1
+        ep = next(self._epoch)
+        self.running[job] = ep
+        return ep
+
+    def release(self, job: int) -> None:
+        """Return ``job``'s server; retire it instead if over target."""
+        del self.running[job]
+        if len(self.running) + self.free + 1 > self.target:
+            return  # drain: shrink retires this server at the boundary
+        self.free += 1
+
+    def resize(self, target: int) -> None:
+        self.target = target
+        have = self.free + len(self.running)
+        if target > have:
+            self.free += target - have
+        elif have > target:
+            # retire idle servers now; busy ones drain on release
+            self.free -= min(self.free, have - target)
+
+
+class Engine:
+    """Event heap + batch draining + dispatch; behavior via hooks.
+
+    The caller seeds the heap with :meth:`schedule` (arrivals, resize
+    events, the first failure timer) and calls :meth:`run`.  Per-job
+    progress lives in ``stage`` (stages completed so far) and
+    ``completion`` (exit time, NaN while in system).
+    """
+
+    def __init__(
+        self,
+        n_jobs: int,
+        n_servers: int,
+        hooks: SchedulerHooks,
+        observer=None,
+    ):
+        self.n_jobs = n_jobs
+        self.hooks = hooks
+        self.observer = observer  # observer(engine, now) after each event
+        self.pool = ServerPool(n_servers)
+        self.ready = ReadyQueue()
+        self.stage = np.zeros(n_jobs, dtype=np.int64)
+        self.completion = np.full(n_jobs, np.nan)
+        self.n_done = 0
+        self.makespan = 0.0
+        self._events: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+
+    # -- caller API -------------------------------------------------------
+
+    def schedule(self, t: float, kind: int, payload: object = None) -> None:
+        heapq.heappush(self._events, (float(t), next(self._seq), kind, payload))
+
+    def abort(self, job: int) -> None:
+        """Abort ``job``'s in-flight stage (failure): free its server.
+
+        Progress is not advanced; the pending ``STAGE_DONE`` goes stale
+        via the epoch check.  The hook re-schedules the job's
+        re-``ARRIVAL`` itself (e.g. after a checkpoint-restore window).
+        """
+        self.pool.release(job)
+
+    def run(self) -> None:
+        events = self._events
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            # An armed-but-idle failure timer is not work; everything
+            # else (including a stale STAGE_DONE) extends the makespan.
+            if kind != FAILURE:
+                self.makespan = max(self.makespan, now)
+            batch = [(kind, payload)]
+            while events and events[0][0] == now:
+                _, _, k2, p2 = heapq.heappop(events)
+                if k2 != FAILURE:
+                    self.makespan = max(self.makespan, now)
+                batch.append((k2, p2))
+            for kind, payload in batch:
+                self._handle(kind, payload, now)
+                if self.observer is not None:
+                    self.observer(self, now)
+            while self.pool.free > 0 and len(self.ready):
+                self._start(self.ready.pop(), now)
+            if self.observer is not None:
+                self.observer(self, now)
+
+    # -- internals --------------------------------------------------------
+
+    def _handle(self, kind: int, payload: object, now: float) -> None:
+        if kind == ARRIVAL:
+            job = payload
+            self.ready.push(self.hooks.index(job, int(self.stage[job])), job)
+        elif kind == STAGE_DONE:
+            job, epoch = payload
+            if self.pool.running.get(job) != epoch:
+                return  # stale: the job was aborted and re-dispatched
+            self.pool.release(job)
+            done_stage = int(self.stage[job])
+            self.stage[job] += 1
+            if done_stage == self.hooks.outcome(job):
+                self.completion[job] = now
+                self.n_done += 1
+                self.hooks.on_complete(job, now)
+            else:  # alive: re-compete with the whole queue (paper §V)
+                self.ready.push(self.hooks.index(job, done_stage + 1), job)
+        elif kind == RESIZE:
+            self.pool.resize(payload)
+        elif kind == FAILURE:
+            self.hooks.on_failure(self, now)
+        else:
+            raise ValueError(f"unknown event kind {kind}")
+
+    def _start(self, job: int, now: float) -> None:
+        epoch = self.pool.acquire(job)
+        dur = self.hooks.stage_duration(job, int(self.stage[job]), now)
+        self.schedule(now + dur, STAGE_DONE, (job, epoch))

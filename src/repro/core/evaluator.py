@@ -47,14 +47,13 @@ from __future__ import annotations
 
 import functools
 import itertools
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policies
-from repro.core.jobs import Workload, pad_workload
+from repro.core.jobs import Workload
 from repro.kernels.sojourn_eval import rng as kernel_rng
 from repro.kernels.sojourn_eval import sojourn_eval, sojourn_eval_dynamic
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
@@ -302,6 +301,7 @@ def expected_sojourn_dynamic(
     weights: np.ndarray | None = None,
     impl: str = "auto",
     samples: tuple[int, int] | None = None,
+    n_servers: int = 1,
 ) -> float:
     """Exact expected sojourn of successful jobs for a stage-level policy.
 
@@ -311,9 +311,11 @@ def expected_sojourn_dynamic(
     Passing ``samples=(seed, n_samples)`` runs streaming Monte Carlo
     through the same fused op — outcomes are generated in-tile from the
     counter-based RNG stream shared with the static op, so no (S, N)
-    table exists at any sample count.  Passing explicit
+    table exists at any sample count.  ``n_servers=W`` evaluates the
+    paper's online multi-server setting exactly (or by streamed MC);
+    both fused entry modes support it.  Passing explicit
     ``outcomes``/``weights`` (a materialized table) runs the legacy
-    lockstep simulation, retained as the reference tier.
+    lockstep simulation, retained as the single-server reference tier.
     """
     _, probs, num_stages = policies.padded_arrays(jobs)
     idx_table = policies.index_table(jobs, policy)
@@ -322,7 +324,7 @@ def expected_sojourn_dynamic(
         with _x64():
             e_succ, _ = sojourn_eval_dynamic(
                 probs, stage_durs, num_stages, idx_table,
-                samples=samples, impl=impl,
+                samples=samples, n_servers=n_servers, impl=impl,
             )
         return float(e_succ[0])
     if outcomes is None:
@@ -334,9 +336,15 @@ def expected_sojourn_dynamic(
             )
         with _x64():
             e_succ, _ = sojourn_eval_dynamic(
-                probs, stage_durs, num_stages, idx_table, impl=impl
+                probs, stage_durs, num_stages, idx_table,
+                n_servers=n_servers, impl=impl,
             )
         return float(e_succ[0])
+    if n_servers != 1:
+        raise ValueError(
+            "the materialized outcomes/weights tier is single-server; "
+            "use the fused path (outcomes=None or samples=) for n_servers > 1"
+        )
     _, success = _realized_arrays(jobs, outcomes)
     total_stages = int(num_stages.sum())
     with _x64():

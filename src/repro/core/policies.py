@@ -30,13 +30,15 @@ from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.jobs import JobSpec, Workload, pad_workload
+from repro.core.jobs import Workload, pad_workload
 
 __all__ = [
     "workload_key",
     "workload_cached",
     "cache_stats",
     "reset_cache_stats",
+    "default_cache_dir",
+    "ensure_cache_dir",
     "padded_arrays",
     "stage_durations",
     "rank_values",
@@ -70,16 +72,47 @@ _INF = np.float64(np.inf)
 # Setting ``REPRO_CACHE_DIR`` additionally memoizes the tables on disk
 # (one ``.npz`` per (kind, workload) entry, written atomically), so
 # sweep processes launched repeatedly over the same workloads skip the
-# recomputation entirely.  Disk traffic has its own hit/miss counters,
-# folded into ``cache_stats`` only when the disk tier is exercised.
+# recomputation entirely.  The disk tier is size-bounded:
+# ``REPRO_CACHE_DISK_BYTES`` (default 2 GiB; ``0`` or ``none`` disables
+# the bound) caps the total ``.npz`` footprint with LRU eviction —
+# loads refresh an entry's mtime, stores evict the stalest entries
+# above the bound.  Disk traffic has its own hit/miss/eviction
+# counters, folded into ``cache_stats`` only when the disk tier is
+# exercised.
 
 _CACHE_CAPACITY = 256
+#: Default size bound of the on-disk tier (overridable via the
+#: ``REPRO_CACHE_DISK_BYTES`` env var; ``0`` or ``none`` removes it).
+_DISK_BYTES_DEFAULT = 2 << 30
 _cache: OrderedDict[tuple[str, str], object] = OrderedDict()
 _cache_lock = threading.Lock()
 #: Counters per derived-table kind: [mem hits, mem misses, disk hits,
 #: disk misses] (observability; see ``cache_stats`` and the benchmark
 #: harness, which surfaces them).
 _cache_stats: dict[str, list[int]] = {}
+#: Entries removed from the disk tier by the LRU size bound.
+_disk_evictions = 0
+
+
+def default_cache_dir() -> str:
+    """Default ``REPRO_CACHE_DIR`` for paper-scale sweep entry points."""
+    root = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache"
+    )
+    return os.path.join(root, "repro-workloads")
+
+
+def ensure_cache_dir(path: str | None = None) -> str:
+    """Point ``REPRO_CACHE_DIR`` at a real directory and return it.
+
+    Respects an existing ``REPRO_CACHE_DIR`` (only sets the default when
+    unset), so sweep entry points (``benchmarks/run.py --full``, the
+    DES/cluster examples) share one cross-process disk memo without
+    clobbering explicit user configuration.
+    """
+    root = os.environ.setdefault("REPRO_CACHE_DIR", path or default_cache_dir())
+    os.makedirs(root, exist_ok=True)
+    return root
 
 
 def workload_key(jobs: Workload) -> str:
@@ -112,6 +145,61 @@ def _disk_path(kind: str, digest: str) -> str | None:
     return os.path.join(root, f"{safe}__{digest}.npz")
 
 
+def _disk_limit_bytes() -> int | None:
+    """Size bound of the disk tier in bytes; None when unbounded."""
+    raw = os.environ.get("REPRO_CACHE_DISK_BYTES")
+    if raw is None:
+        return _DISK_BYTES_DEFAULT
+    raw = raw.strip().lower()
+    if raw in ("", "0", "none", "unbounded"):
+        return None
+    return int(raw)
+
+
+def _disk_evict(root: str, keep: str) -> None:
+    """LRU-evict ``.npz`` entries until the tier fits its size bound.
+
+    Eviction order is mtime (oldest first): loads ``os.utime`` the entry
+    they hit, so mtime is last-use recency.  ``keep`` (the entry just
+    written) is never evicted.  Races with concurrent sweep processes
+    are benign — a vanished file is simply skipped, an evicted entry is
+    recomputed as a disk miss.
+    """
+    global _disk_evictions
+    limit = _disk_limit_bytes()
+    if limit is None:
+        return
+    entries = []
+    total = 0
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return
+    for name in names:
+        if not name.endswith(".npz"):
+            continue
+        path = os.path.join(root, name)
+        try:
+            st = os.stat(path)
+        except OSError:
+            continue
+        entries.append((st.st_mtime, st.st_size, path))
+        total += st.st_size
+    entries.sort()
+    for _, size, path in entries:
+        if total <= limit:
+            break
+        if path == keep:
+            continue
+        try:
+            os.unlink(path)
+        except OSError:
+            continue
+        total -= size
+        with _cache_lock:
+            _disk_evictions += 1
+
+
 def _disk_load(path: str):
     """Load a memoized value; None if absent/unreadable (treated as miss)."""
     try:
@@ -121,6 +209,10 @@ def _disk_load(path: str):
             is_tuple = bool(z["is_tuple"])
     except (OSError, KeyError, ValueError):
         return None
+    try:
+        os.utime(path)  # refresh LRU recency for the size-bound eviction
+    except OSError:
+        pass
     items = [v.item() if s else v for v, s in zip(items, scalars)]
     return tuple(items) if is_tuple else items[0]
 
@@ -147,6 +239,8 @@ def _disk_store(path: str, value) -> None:
             os.unlink(tmp)
         except OSError:
             pass
+        return
+    _disk_evict(os.path.dirname(path) or ".", keep=path)
 
 
 def workload_cached(kind: str, jobs: Workload, compute):
@@ -227,12 +321,16 @@ def cache_stats() -> dict:
     if disk_hits or disk_misses:
         stats["disk_hits"] = disk_hits
         stats["disk_misses"] = disk_misses
+    if _disk_evictions:
+        stats["disk_evictions"] = _disk_evictions
     return stats
 
 
 def reset_cache_stats() -> None:
+    global _disk_evictions
     with _cache_lock:
         _cache_stats.clear()
+        _disk_evictions = 0
 
 
 def padded_arrays(jobs: Workload) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -6,8 +6,15 @@ When a server completes a *stage* of a job, it serves the minimum-index job
 among {ready queue} ∪ {the job it just served} — i.e. stage-boundary
 preemption driven by a policy index table (rank / SERPT / SR / FIFO).
 
-This is host-side control logic (microsecond-scale events); it drives both
-the paper's trace study and the cluster manager in :mod:`repro.cluster`.
+This is a thin frontend over the unified engine in
+:mod:`repro.core.des.engine` (which also drives the cluster manager):
+the hooks here are pure table lookups — policy index, padded stage
+duration plus a fixed overhead, and a pre-realized outcome stage.
+Events at the same instant are drained as one batch before dispatch, so
+simultaneous arrivals (the paper's static setting: all jobs present at
+t=0) contend by policy index, ties by job position — matching the exact
+lockstep evaluators in :mod:`repro.kernels.sojourn_eval`.
+
 The index is *conditional on progress*: a partially-served job competes
 with its up-to-date conditional index (see
 :func:`repro.core.policies.rank_index_table`).
@@ -16,12 +23,11 @@ with its up-to-date conditional index (see
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 
 import numpy as np
 
 from repro.core import policies
+from repro.core.des import ARRIVAL, Engine, ReadyQueue, SchedulerHooks  # noqa: F401
 from repro.core.jobs import Workload
 
 __all__ = ["SimResult", "ReadyQueue", "simulate"]
@@ -41,30 +47,6 @@ class SimResult:
         return dataclasses.asdict(self)
 
 
-class ReadyQueue:
-    """Priority queue of waiting jobs keyed by policy index (min first).
-
-    Queued jobs never change stage, so indices never go stale; O(log N)
-    push/pop as noted in the paper's Section V.
-    """
-
-    def __init__(self):
-        self._heap: list[tuple[float, int, int]] = []
-        self._seq = itertools.count()
-
-    def push(self, index: float, job: int) -> None:
-        heapq.heappush(self._heap, (index, next(self._seq), job))
-
-    def pop(self) -> int:
-        return heapq.heappop(self._heap)[2]
-
-    def peek_index(self) -> float:
-        return self._heap[0][0] if self._heap else np.inf
-
-    def __len__(self) -> int:
-        return len(self._heap)
-
-
 def _realize_outcomes(jobs: Workload, rng: np.random.Generator | None) -> np.ndarray:
     out = np.empty(len(jobs), dtype=np.int64)
     for i, j in enumerate(jobs):
@@ -75,6 +57,25 @@ def _realize_outcomes(jobs: Workload, rng: np.random.Generator | None) -> np.nda
                 raise ValueError("jobs without fixed outcomes need an rng")
             out[i] = rng.choice(j.num_stages, p=j.probs)
     return out
+
+
+class _TableHooks(SchedulerHooks):
+    """Trace-study hooks: everything is a precomputed table lookup."""
+
+    def __init__(self, idx_table, stage_durs, outcomes, stage_overhead):
+        self.idx_table = idx_table
+        self.stage_durs = stage_durs
+        self.outcomes = outcomes
+        self.stage_overhead = stage_overhead
+
+    def index(self, job: int, stage: int) -> float:
+        return float(self.idx_table[job, stage])
+
+    def stage_duration(self, job: int, stage: int, now: float) -> float:
+        return float(self.stage_durs[job, stage]) + self.stage_overhead
+
+    def outcome(self, job: int) -> int:
+        return int(self.outcomes[job])
 
 
 def simulate(
@@ -106,60 +107,20 @@ def simulate(
     outcomes = _realize_outcomes(jobs, rng)
     arrivals = np.array([j.arrival for j in jobs])
 
-    # Event heap: (time, seq, kind, job).  kind: 0=arrival, 1=stage done.
-    seq = itertools.count()
-    events: list[tuple[float, int, int, int]] = [
-        (float(arrivals[i]), next(seq), 0, i) for i in range(n)
-    ]
-    heapq.heapify(events)
-    ready = ReadyQueue()
-
-    stage = np.zeros(n, dtype=np.int64)  # stages completed so far
-    free = n_servers
-    completion = np.full(n, np.nan)
-    makespan = 0.0
-
-    def start(job: int, now: float) -> None:
-        dur = float(stage_durs[job, stage[job]]) + stage_overhead
-        heapq.heappush(events, (now + dur, next(seq), 1, job))
-
-    # Events at the *same instant* are drained as one batch before any
-    # dispatch, so simultaneous arrivals (the paper's static setting: all
-    # jobs present at t=0) contend by policy index rather than by event
-    # order — the min-index job starts first, ties by job position,
-    # matching the exact evaluators' lockstep simulation.  At distinct
-    # timestamps (the trace studies) the behavior is unchanged.
-    while events:
-        now, _, kind, job = heapq.heappop(events)
-        makespan = max(makespan, now)
-        batch = [(kind, job)]
-        while events and events[0][0] == now:
-            _, _, k2, j2 = heapq.heappop(events)
-            batch.append((k2, j2))
-        for kind, job in batch:
-            if kind == 0:  # arrival: contend for a server by index
-                ready.push(float(idx_table[job, stage[job]]), job)
-            else:  # stage completed
-                done_stage = stage[job]
-                stage[job] += 1
-                free += 1
-                if done_stage == outcomes[job]:  # finished (success or term.)
-                    completion[job] = now
-                else:  # alive: re-compete with the queue at its new index
-                    ready.push(float(idx_table[job, stage[job]]), job)
-        while free > 0 and len(ready):
-            free -= 1
-            start(ready.pop(), now)
+    eng = Engine(n, n_servers, _TableHooks(idx_table, stage_durs, outcomes, stage_overhead))
+    for i in range(n):
+        eng.schedule(float(arrivals[i]), ARRIVAL, i)
+    eng.run()
 
     success = outcomes == (num_stages - 1)
-    sojourn = completion - arrivals
+    sojourn = eng.completion - arrivals
     assert not np.any(np.isnan(sojourn)), "all jobs must finish"
     return SimResult(
         mean_sojourn_successful=float(sojourn[success].mean()) if success.any() else 0.0,
         mean_sojourn_all=float(sojourn.mean()),
         n_success=int(success.sum()),
         n_jobs=n,
-        makespan=float(makespan),
+        makespan=float(eng.makespan),
         policy=policy,
         n_servers=n_servers,
     )

@@ -4,7 +4,7 @@ Kernel design note — in-tile lockstep simulation of index policies
 ==================================================================
 
 The paper's stage-level policies (§III-A, §IV-V) re-rank jobs at every
-checkpoint: the single server always serves the alive job with the
+checkpoint: each of the W servers always serves the alive job with the
 minimum *conditional* index, where SOAP-style (Scully & Harchol-Balter)
 the whole policy is described by its rank function — here a precomputed
 ``(N, M)`` table ``idx[i, s]`` = job i's priority after surviving ``s``
@@ -29,24 +29,34 @@ static ``sojourn_enum`` op — no ``(K, N)`` table anywhere, exact to
   via one-hot selects over the small stage axis; tail combinations
   ``k >= K`` carry zero weight.
 
-* **In-tile index selection** — every lane then simulates its own
-  combination in lockstep over ``sum_i M_i`` server steps.  The per-lane
-  state is one current-stage register per job plus clock / sojourn
-  accumulators.  Each step (a ``fori_loop``) unrolls two passes over the
-  (static) job axis:
+* **In-tile multi-server lockstep** — every lane then simulates its own
+  combination in lockstep over ``sum_i M_i`` completion events on
+  ``n_servers = W`` homogeneous servers.  The per-lane state is one
+  current-stage register and one ``busy_until`` register per job
+  (``+inf`` while not running) plus a busy count, clock and sojourn
+  accumulators.  After seating the W smallest-index jobs at t=0 (W
+  unrolled dispatch passes), each step (a ``fori_loop``) unrolls two
+  passes over the (static) job axis:
 
-  1. *select*: gather each alive job's conditional index
-     ``idx[j, stage_j]`` by one-hot select, and track the running
-     minimum with a strict ``<`` compare — ties break toward the lowest
-     job position, exactly matching ``jnp.argmin`` in
-     ``evaluator._dynamic_batch`` and the DES's arrival-order heap.
-     Done jobs contribute ``+inf``; if every job is done the sentinel
-     "best job" ``n`` matches nothing and the step is a no-op.
-  2. *advance*: the selected job executes one checkpoint segment
-     (``stage_durs[j, stage_j]``, again one-hot), the lane clock
-     advances, and if the segment reaches the decoded stop stage the
-     job's completion time is folded into the successful / all-job
-     sojourn accumulators (success == stopping at stage ``M_j - 1``).
+  1. *complete*: pop the running job with the earliest ``busy_until``
+     via a running minimum with a strict ``<`` compare — ties break
+     toward the lowest job position, exactly matching the unified DES's
+     event heap (``(time, seq)`` ordering).  The lane clock advances to
+     the finish time; if the finished segment reaches the decoded stop
+     stage the job's completion time is folded into the successful /
+     all-job sojourn accumulators (success == stopping at stage
+     ``M_j - 1``), else the job rejoins the queue at its next
+     conditional index.  If nothing is running the sentinel "job" ``n``
+     matches nothing and the step is a no-op.
+  2. *dispatch*: seat the queued job with the minimum conditional index
+     ``idx[j, stage_j]`` (one-hot gathers, strict ``<`` running
+     minimum, ties by position — ``jnp.argmin`` semantics) on the freed
+     server, ``busy_until = clock + stage_durs[j, stage_j]``.  One pass
+     suffices: a completion frees exactly one server and requeues at
+     most one job, so the queue and the free pool can never both be
+     nonempty after it.  With ``W = 1`` the math reduces bitwise to the
+     single-server kernel of PR 7 (``busy = clock + dur`` then
+     ``clock = busy``).
 
 * **Reduction** — after the step loop the lane holds Eq. (7)'s mean
   sojourn of successful jobs for its combination; the tile accumulates
@@ -87,60 +97,102 @@ XLA_TILE = 1 << 15
 # ---------------------------------------------------------------------------
 
 
-def _lockstep_sim(sdec, succ, idx_s, dur_s, *, n, m, total_stages, dtype):
-    """Shared in-tile lockstep single-server simulation.
+def _lockstep_sim(
+    sdec, succ, idx_s, dur_s, *, n, m, total_stages, dtype, n_servers=1
+):
+    """Shared in-tile lockstep multi-server simulation.
 
     Every lane simulates its own outcome combination (``sdec[j]`` = the
     decoded stop stage of job ``j`` per lane, however it was produced —
     mixed-radix enumeration or the Threefry MC stream) in lockstep over
-    ``total_stages`` server steps.  Returns per-lane ``(tot, tsum,
-    cnt)``: summed successful completion times, summed all-job
-    completion times, and the success count.
+    ``total_stages`` completion events on ``n_servers`` homogeneous
+    servers.  Per-lane state is one current-stage register and one
+    ``busy_until`` register per job (``+inf`` while not running).  Each
+    step pops the earliest-finishing running job (ties by job position),
+    advances the lane clock to its finish time, then seats the
+    minimum-index queued job on the freed server; since a completion
+    event adds at most one job back to the queue and servers free one at
+    a time, a single dispatch pass per step is exhaustive.  The t=0
+    seating of the ``min(W, N)`` smallest-index jobs happens before the
+    loop.  Returns per-lane ``(tot, tsum, cnt)``: summed successful
+    completion times, summed all-job completion times, and the success
+    count.  ``n_servers=1`` reproduces the single-server math bitwise
+    (``busy = clock + dur`` then ``clock = busy``).
     """
     shape = (K.SUBLANES, K.LANES)
     inf = jnp.full(shape, jnp.inf, dtype)
     zf = jnp.zeros(shape, dtype)
     zi = jnp.zeros(shape, jnp.int32)
+    w_srv = min(n_servers, n)
 
-    def step(_, carry):
-        stages, clock, tot, tsum, cnt = carry
-        # pass 1: running minimum of the alive jobs' conditional indices;
-        # strict < keeps the first minimum (ties by job position).
+    def _gather(table_j, st, fill):
+        v = fill
+        for s_ in range(m):
+            v = jnp.where(st == s_, table_j[s_], v)
+        return v
+
+    def _dispatch_one(stages, busy, nbusy, clock):
+        # seat the queued job with the minimum conditional index on a
+        # free server; strict < keeps the first minimum (ties by job
+        # position).  Sentinel ``n`` when the queue is empty.
         best = inf
-        bestj = jnp.full(shape, n, jnp.int32)  # sentinel: nothing alive
+        bestj = jnp.full(shape, n, jnp.int32)
         for j in range(n):
             st = stages[j]
-            idx_j = inf
-            for s_ in range(m):
-                idx_j = jnp.where(st == s_, idx_s[j][s_], idx_j)
-            idx_j = jnp.where(st <= sdec[j], idx_j, inf)  # done -> +inf
+            queued = (busy[j] == jnp.inf) & (st <= sdec[j])
+            idx_j = jnp.where(queued, _gather(idx_s[j], st, inf), inf)
             better = idx_j < best
             best = jnp.where(better, idx_j, best)
             bestj = jnp.where(better, j, bestj)
-        # pass 2: advance the selected job one checkpoint segment.
-        dur = zf
+        can = (nbusy < w_srv) & (bestj < n)
+        new_busy = []
+        for j in range(n):
+            sel = can & (bestj == j)
+            d_j = _gather(dur_s[j], stages[j], zf)
+            new_busy.append(jnp.where(sel, clock + d_j, busy[j]))
+        return tuple(new_busy), nbusy + can.astype(jnp.int32)
+
+    def step(_, carry):
+        stages, busy, nbusy, clock, tot, tsum, cnt = carry
+        # completion: pop the running job with the earliest finish time;
+        # strict < keeps the first minimum (ties by job position).
+        tmin = inf
+        cjob = jnp.full(shape, n, jnp.int32)  # sentinel: nothing running
+        for j in range(n):
+            better = busy[j] < tmin
+            tmin = jnp.where(better, busy[j], tmin)
+            cjob = jnp.where(better, j, cjob)
+        has = cjob < n
+        clock = jnp.where(has, tmin, clock)
         fin_any = jnp.zeros(shape, jnp.bool_)
         fin_succ = jnp.zeros(shape, jnp.bool_)
-        new_stages = []
+        new_stages, new_busy = [], []
         for j in range(n):
-            sel = bestj == j
+            sel = cjob == j
             st = stages[j]
-            d_j = zf
-            for s_ in range(m):
-                d_j = jnp.where(st == s_, dur_s[j][s_], d_j)
-            dur = jnp.where(sel, d_j, dur)
             fin_j = sel & (st == sdec[j])
             fin_any = fin_any | fin_j
             fin_succ = fin_succ | (fin_j & succ[j])
             new_stages.append(st + sel.astype(jnp.int32))
-        clock = clock + dur
+            new_busy.append(jnp.where(sel, inf, busy[j]))
+        nbusy = nbusy - has.astype(jnp.int32)
         tot = jnp.where(fin_succ, tot + clock, tot)
         cnt = cnt + fin_succ.astype(jnp.int32)
         tsum = jnp.where(fin_any, tsum + clock, tsum)
-        return tuple(new_stages), clock, tot, tsum, cnt
+        # refill the freed server: at most one job (re)joined the queue,
+        # so one dispatch pass per completion is exhaustive.
+        busy2, nbusy = _dispatch_one(
+            tuple(new_stages), tuple(new_busy), nbusy, clock
+        )
+        return tuple(new_stages), busy2, nbusy, clock, tot, tsum, cnt
 
-    init = (tuple(zi for _ in range(n)), zf, zf, zf, zi)
-    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, step, init)
+    stages0 = tuple(zi for _ in range(n))
+    busy0 = tuple(inf for _ in range(n))
+    nbusy0 = zi
+    for _ in range(w_srv):  # t=0: seat the W smallest-index jobs
+        busy0, nbusy0 = _dispatch_one(stages0, busy0, nbusy0, zf)
+    init = (stages0, busy0, nbusy0, zf, zf, zf, zi)
+    _, _, _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, step, init)
     return tot, tsum, cnt
 
 
@@ -160,6 +212,7 @@ def _dynamic_kernel(
     total_stages: int,
     k_total: int,
     nkt: int,
+    n_servers: int,
 ):
     kt = pl.program_id(1)
 
@@ -188,10 +241,10 @@ def _dynamic_kernel(
         sdec.append(s)
         succ.append(s == radix - 1)
 
-    # --- lockstep single-server simulation (stage-boundary preemption) ---
+    # --- lockstep multi-server simulation (stage-boundary preemption) ---
     tot, tsum, cnt = _lockstep_sim(
         sdec, succ, idx_s, dur_s, n=n, m=m, total_stages=total_stages,
-        dtype=dtype,
+        dtype=dtype, n_servers=n_servers,
     )
 
     # Eq. (7) mean over the successful jobs; Eq. (9) weighted reduction.
@@ -220,6 +273,7 @@ def _dynamic_mc_kernel(
     total_stages: int,
     n_samples: int,
     nkt: int,
+    n_servers: int,
 ):
     """Streamed-MC variant: lanes own sample indices and decode each
     job's stop stage from the Threefry counter stream instead of the
@@ -256,7 +310,7 @@ def _dynamic_mc_kernel(
 
     tot, tsum, cnt = _lockstep_sim(
         sdec, succ, idx_s, dur_s, n=n, m=m, total_stages=total_stages,
-        dtype=dtype,
+        dtype=dtype, n_servers=n_servers,
     )
 
     mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
@@ -277,6 +331,7 @@ def dynamic_sojourn_enum(
     k_total: int,
     total_stages: int,
     *,
+    n_servers: int = 1,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Exact (E[sojourn successful], E[sojourn all]) per policy, fused."""
@@ -290,6 +345,7 @@ def dynamic_sojourn_enum(
         total_stages=total_stages,
         k_total=k_total,
         nkt=nkt,
+        n_servers=n_servers,
     )
     out_succ, out_all = pl.pallas_call(
         kernel,
@@ -333,6 +389,7 @@ def dynamic_sojourn_mc(
     n_samples: int,
     total_stages: int,
     *,
+    n_servers: int = 1,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Streamed-MC (E[sojourn successful], E[sojourn all]) per policy."""
@@ -347,6 +404,7 @@ def dynamic_sojourn_mc(
         total_stages=total_stages,
         n_samples=n_samples,
         nkt=nkt,
+        n_servers=n_servers,
     )
     out_succ, out_all = pl.pallas_call(
         kernel,
@@ -386,51 +444,81 @@ def dynamic_sojourn_mc(
 # ---------------------------------------------------------------------------
 
 
-def _sim_tile_xla(s, succ, idx_table, stage_durs, job_ids, *, m, total_stages):
+def _sim_tile_xla(
+    s, succ, idx_table, stage_durs, job_ids, *, m, total_stages, n_servers=1
+):
     """Shared per-tile lockstep simulation, job axis vectorized.
 
     ``s`` is the (T, N) decoded stop-stage matrix for this tile (from
     the mixed-radix rule or the Threefry MC stream); returns per-lane
-    ``(tot, tsum, cnt)`` as in :func:`_lockstep_sim`.
+    ``(tot, tsum, cnt)`` as in :func:`_lockstep_sim`.  Same multi-server
+    state machine (per-job ``busy_until`` row, completion pop + one
+    dispatch pass per step) with ``argmin`` standing in for the unrolled
+    running-minimum passes — both keep the first minimum on ties.
     """
     tile, n = s.shape
     dtype = stage_durs.dtype
     inf_row = jnp.full((tile, n), jnp.inf, dtype)
+    w_srv = min(n_servers, n)
 
-    def body(_, st):
-        stage, clock, tot, tsum, cnt = st
+    def _tables(stage):
         idx = inf_row
         dur = jnp.zeros((tile, n), dtype)
         for s_ in range(m):  # one-hot gather over the stage axis
             hit = stage == s_
             idx = jnp.where(hit, idx_table[None, :, s_], idx)
             dur = jnp.where(hit, stage_durs[None, :, s_], dur)
-        alive = stage <= s
-        idx = jnp.where(alive, idx, jnp.inf)
-        j = jnp.argmin(idx, axis=1)  # first minimum: ties by position
-        sel = (j[:, None] == job_ids) & alive  # all-done lanes: no-op
-        clock = clock + jnp.sum(jnp.where(sel, dur, 0.0), axis=1)
+        return idx, dur
+
+    def _dispatch_one(stage, busy, nbusy, clock):
+        idx, dur = _tables(stage)
+        queued = (busy == jnp.inf) & (stage <= s)
+        idxq = jnp.where(queued, idx, jnp.inf)
+        j = jnp.argmin(idxq, axis=1)  # first minimum: ties by position
+        can = (nbusy < w_srv) & jnp.isfinite(jnp.min(idxq, axis=1))
+        sel = (j[:, None] == job_ids) & can[:, None] & queued
+        busy = jnp.where(sel, clock[:, None] + dur, busy)
+        return busy, nbusy + can.astype(jnp.int32)
+
+    def body(_, st):
+        stage, busy, nbusy, clock, tot, tsum, cnt = st
+        tmin = jnp.min(busy, axis=1)
+        cj = jnp.argmin(busy, axis=1)  # earliest finish; ties by position
+        has = jnp.isfinite(tmin)  # all-idle lanes: no-op
+        clock = jnp.where(has, tmin, clock)
+        sel = (cj[:, None] == job_ids) & has[:, None]
         fin = sel & (stage == s)
         fin_any = jnp.any(fin, axis=1)
         fin_succ = jnp.any(fin & succ, axis=1)
         tot = tot + jnp.where(fin_succ, clock, 0.0)
         cnt = cnt + fin_succ.astype(jnp.int32)
         tsum = tsum + jnp.where(fin_any, clock, 0.0)
-        return stage + sel.astype(jnp.int32), clock, tot, tsum, cnt
+        stage = stage + sel.astype(jnp.int32)
+        busy = jnp.where(sel, jnp.inf, busy)
+        nbusy = nbusy - has.astype(jnp.int32)
+        busy, nbusy = _dispatch_one(stage, busy, nbusy, clock)
+        return stage, busy, nbusy, clock, tot, tsum, cnt
 
     zf = jnp.zeros((tile,), dtype)
-    init = (jnp.zeros((tile, n), jnp.int32), zf, zf, zf,
-            jnp.zeros((tile,), jnp.int32))
-    _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, body, init)
+    zi = jnp.zeros((tile,), jnp.int32)
+    stage0 = jnp.zeros((tile, n), jnp.int32)
+    busy0, nbusy0 = inf_row, zi
+    for _ in range(w_srv):  # t=0: seat the W smallest-index jobs
+        busy0, nbusy0 = _dispatch_one(stage0, busy0, nbusy0, zf)
+    init = (stage0, busy0, nbusy0, zf, zf, zf, zi)
+    _, _, _, _, tot, tsum, cnt = jax.lax.fori_loop(0, total_stages, body, init)
     return tot, tsum, cnt
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("strides", "radix", "k_total", "tile", "total_stages"),
+    static_argnames=(
+        "strides", "radix", "k_total", "tile", "total_stages", "n_servers"
+    ),
 )
 def _dynamic_enum_xla(
-    probs, stage_durs, idx_table, *, strides, radix, k_total, tile, total_stages
+    probs, stage_durs, idx_table, *, strides, radix, k_total, tile,
+    total_stages, n_servers=1,
 ):
     """Exact fused dynamic evaluation for one policy; ``strides``/``radix``
     are static tuples so the decode lowers to constant div/mod chains."""
@@ -451,7 +539,7 @@ def _dynamic_enum_xla(
         succ = s == radix_a - 1
         tot, tsum, cnt = _sim_tile_xla(
             s, succ, idx_table, stage_durs, job_ids, m=m,
-            total_stages=total_stages,
+            total_stages=total_stages, n_servers=n_servers,
         )
         mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
         return (e_succ + jnp.dot(w, mean), e_all + jnp.dot(w, tsum / n)), None
@@ -464,10 +552,12 @@ def _dynamic_enum_xla(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("radix", "n_samples", "tile", "total_stages")
+    jax.jit,
+    static_argnames=("radix", "n_samples", "tile", "total_stages", "n_servers"),
 )
 def _dynamic_mc_xla(
-    cdf, stage_durs, idx_table, key2, *, radix, n_samples, tile, total_stages
+    cdf, stage_durs, idx_table, key2, *, radix, n_samples, tile, total_stages,
+    n_servers=1,
 ):
     """Streamed-MC dynamic evaluation for one policy: per-tile Threefry
     outcome generation (identical counters and compares to the static op
@@ -494,7 +584,7 @@ def _dynamic_mc_xla(
         succ = s == radix_a - 1
         tot, tsum, cnt = _sim_tile_xla(
             s, succ, idx_table, stage_durs, job_ids, m=m,
-            total_stages=total_stages,
+            total_stages=total_stages, n_servers=n_servers,
         )
         mean = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1).astype(dtype), 0.0)
         return (e_succ + jnp.dot(w, mean), e_all + jnp.dot(w, tsum / n)), None
@@ -526,6 +616,7 @@ def sojourn_eval_dynamic(
     idx_tables: np.ndarray,  # (P, N, M) or (N, M) policy index tables
     *,
     samples: tuple[int, int] | None = None,  # (seed, n_samples) streamed MC
+    n_servers: int = 1,
     impl: str = "auto",
 ) -> tuple[np.ndarray, np.ndarray]:
     """(E[sojourn successful], E[sojourn all]) per policy; see module doc.
@@ -537,10 +628,16 @@ def sojourn_eval_dynamic(
     same quantities by streaming Monte Carlo: outcomes are generated
     in-tile from the counter-based Threefry stream (no ``(S, N)`` table
     anywhere), bitwise identical to the static op's stream and the
-    ``ref.ref_mc_outcomes`` host replay for the same seed.  Returns
-    ``(P,)`` arrays (pass a single ``(N, M)`` table for ``P = 1``).
+    ``ref.ref_mc_outcomes`` host replay for the same seed.
+    ``n_servers=W`` evaluates the paper's online multi-server setting
+    (W homogeneous servers, stage-boundary preemption, same-instant
+    contention by index) — the exact analogue of the unified DES with
+    all arrivals at t=0.  Returns ``(P,)`` arrays (pass a single
+    ``(N, M)`` table for ``P = 1``).
     """
     impl = _resolve(impl)
+    if n_servers < 1:
+        raise ValueError(f"n_servers must be >= 1; got {n_servers}")
     probs = np.asarray(probs)
     stage_durs = np.asarray(stage_durs)
     num_stages = np.asarray(num_stages, dtype=np.int64)
@@ -574,6 +671,7 @@ def sojourn_eval_dynamic(
                     n_samples=n_samples,
                     tile=tile,
                     total_stages=total_stages,
+                    n_servers=n_servers,
                 )
                 for table in idx_tables
             ]
@@ -588,6 +686,7 @@ def sojourn_eval_dynamic(
             seed,
             n_samples,
             total_stages,
+            n_servers=n_servers,
             interpret=impl == "interpret",
         )
         return np.asarray(es), np.asarray(ea)
@@ -605,6 +704,7 @@ def sojourn_eval_dynamic(
                 k_total=k_total,
                 tile=tile,
                 total_stages=total_stages,
+                n_servers=n_servers,
             )
             for table in idx_tables
         ]
@@ -619,6 +719,7 @@ def sojourn_eval_dynamic(
         jnp.asarray(num_stages, jnp.int32),
         k_total,
         total_stages,
+        n_servers=n_servers,
         interpret=impl == "interpret",
     )
     return np.asarray(es), np.asarray(ea)

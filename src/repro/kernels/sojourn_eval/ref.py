@@ -7,10 +7,12 @@ the Pallas kernels and the tiled XLA path in ``ops.py``.
 
 ``ref_sojourn_dynamic`` is the corresponding oracle for stage-level
 index policies (SR / SERPT / conditional-RANK): a deliberately naive
-per-combination Python simulation of single-server stage-boundary
-preemption, structured as a while-loop over server decisions so that it
+per-combination Python simulation of W-server stage-boundary
+preemption (a dict of in-flight finish times, ``n_servers=1`` by
+default), structured as a while-loop over server decisions so that it
 shares no code (and no bugs) with the vectorized lockstep paths it
-checks (``evaluator._dynamic_batch`` and ``dynamic.py``).
+checks (``evaluator._dynamic_batch`` and ``dynamic.py``) nor with the
+unified DES in ``core/des/engine.py``.
 
 ``ref_mc_outcomes`` replays the streaming-Monte-Carlo counter stream
 host-side (NumPy Threefry, :mod:`repro.kernels.sojourn_eval.rng`) into
@@ -110,13 +112,18 @@ def ref_sojourn_dynamic(
     idx_table,  # (N, M) conditional index table (+inf pad)
     outcomes=None,  # optional (K, N) explicit outcome matrix
     weights=None,  # optional (K,) combination weights
+    n_servers=1,  # W homogeneous servers
 ) -> tuple[float, float]:
     """(E[sojourn successful], E[sojourn all]) for one index policy, dense.
 
-    Per combination: repeatedly serve the alive job with the minimum
-    conditional index (ties to the lowest job position) for one
-    checkpoint segment, until every job has stopped at its decoded
-    outcome stage.  Success == stopping at the last stage.
+    Per combination: while a server is free, seat the alive unserved job
+    with the minimum conditional index (ties to the lowest job
+    position); then advance to the earliest finishing segment (ties to
+    the lowest job position) and either record the job's completion (it
+    reached its decoded outcome stage) or requeue it at its next
+    conditional index.  ``n_servers=1`` degenerates to the classic
+    serve-one-segment-at-a-time loop.  Success == stopping at the last
+    stage.
     """
     probs = np.asarray(probs, dtype=np.float64)
     stage_durs = np.asarray(stage_durs, dtype=np.float64)
@@ -135,18 +142,26 @@ def ref_sojourn_dynamic(
         stage = [0] * n
         done = [False] * n
         completion = [0.0] * n
+        finish: dict[int, float] = {}  # job -> busy-until
         clock = 0.0
         while not all(done):
-            best, best_j = np.inf, -1
-            for j in range(n):
-                if not done[j] and idx_table[j, stage[j]] < best:
-                    best, best_j = idx_table[j, stage[j]], j
-            clock += stage_durs[best_j, stage[best_j]]
-            if stage[best_j] == outcome[best_j]:
-                done[best_j] = True
-                completion[best_j] = clock
+            while len(finish) < n_servers:
+                best, best_j = np.inf, -1
+                for j in range(n):
+                    if done[j] or j in finish:
+                        continue
+                    if idx_table[j, stage[j]] < best:
+                        best, best_j = idx_table[j, stage[j]], j
+                if best_j < 0:
+                    break  # queue empty: leave servers idle
+                finish[best_j] = clock + stage_durs[best_j, stage[best_j]]
+            j = min(finish, key=lambda q: (finish[q], q))
+            clock = finish.pop(j)
+            if stage[j] == outcome[j]:
+                done[j] = True
+                completion[j] = clock
             else:
-                stage[best_j] += 1
+                stage[j] += 1
         succ = [j for j in range(n) if outcome[j] == num_stages[j] - 1]
         if succ:
             e_succ += w * float(np.mean([completion[j] for j in succ]))

@@ -24,14 +24,12 @@ import traceback
 import jax
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.configs.shapes import LONG_OK, SHAPES, arch_shape_config, input_specs, runnable_cells
+from repro.configs.shapes import SHAPES, arch_shape_config, input_specs, runnable_cells
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh
-from repro.launch.serve import ServePlan, default_serve_plan, make_decode_fn, make_prefill_fn
+from repro.launch.serve import default_serve_plan, make_decode_fn, make_prefill_fn
 from repro.launch.train import default_plan, make_train_step
 from repro.models import transformer as T
-from repro.parallel.sharding import logical_sharding
 
 
 def _abstract(tree):

@@ -27,10 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import re
 
-import numpy as np
 
 __all__ = [
     "HW",

@@ -16,7 +16,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import transformer as T

@@ -21,7 +21,6 @@ token, consumes/updates the cache).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

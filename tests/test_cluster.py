@@ -96,3 +96,49 @@ def test_real_runner_integration():
     assert res.n_jobs == 3
     assert res.n_success == 0  # every job gated at stage 1 (< last stage 2)
     assert all(stage <= 1 for _, stage in calls)
+
+
+def test_same_instant_arrivals_batch_drain_tiebreak():
+    """Regression: all t=0 arrivals drain as one batch before any dispatch,
+    so the first server goes to the lowest-index job (not the lowest job
+    id), and exact index ties fall back to job position."""
+    sizes = [3.0, 1.0, 2.0, 1.0]  # jobs 1 and 3 tie on SERPT index
+    spec = [
+        JobSpec(sizes=np.array([s]), probs=np.array([1.0]), job_id=i)
+        for i, s in enumerate(sizes)
+    ]
+    tj = [TrainingJob(spec=s) for s in spec]
+    res = ClusterManager(tj, 1, policy="serpt", rng=np.random.default_rng(0)).run()
+    # seating order: job1 (size 1), job3 (size 1, tie -> higher position),
+    # job2 (size 2), job0 (size 3)
+    assert [j.completed for j in tj] == [7.0, 1.0, 4.0, 2.0]
+    assert res.n_success == 4
+    assert res.mean_sojourn_successful == pytest.approx((7.0 + 1.0 + 4.0 + 2.0) / 4)
+
+
+def test_server_accounting_invariant_under_faults_and_resize():
+    """Property: at every engine event, len(running) + free <= target and
+    free >= 0 — no server is leaked or double-freed across FAILURE /
+    RESIZE / STAGE_DONE interleavings (including shrink-while-busy)."""
+    spec = _workload(80, seed=11)
+    tj = [TrainingJob(spec=s) for s in spec]
+    events = []
+
+    def observer(engine, now):
+        pool = engine.pool
+        assert pool.free >= 0, now
+        assert len(pool.running) + pool.free <= pool.target, now
+        events.append(now)
+
+    res = ClusterManager(
+        tj, 8, rng=np.random.default_rng(12),
+        fault_cfg=FaultConfig(mtbf_hours=0.004, restart_overhead=0.1,
+                              straggler_prob=0.2, straggler_slowdown=5.0,
+                              deadline_factor=2.0),
+        nodes_per_server=8,
+        resize_events=[(2.0, 16), (6.0, 3), (10.0, 10)],
+    ).run(observer=observer)
+    assert res.restarts > 0  # faults actually interleaved with resizes
+    assert len(events) > len(spec)  # observer saw every event
+    assert res.n_jobs == len(spec)
+    assert not np.isnan(res.mean_sojourn_all)  # every job finished

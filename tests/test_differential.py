@@ -8,10 +8,11 @@ independent implementations of exact stage-level policy evaluation:
   and Pallas interpret mode);
 * the seed materialized lockstep simulation (``evaluator._dynamic_batch``);
 * the dense pure-Python oracle (``ref.ref_sojourn_dynamic``);
-* an exhaustive run of ``simulate(..., n_servers=1)`` over every
-  enumerated outcome combination.
+* an exhaustive run of the unified DES (``simulate(..., n_servers=W)``)
+  over every enumerated outcome combination.
 
-All four must agree on ``mean_sojourn_successful`` to <= 1e-9 relative.
+All four must agree on ``mean_sojourn_successful`` to <= 1e-9 relative,
+for ``n_servers = 1`` and for the multi-server cases (W in {2, 3}).
 Hypothesis is optional tooling (kept out of the runtime dependency set);
 the seeded deterministic slice of this suite lives in
 ``test_dynamic_eval.py`` and always runs.
@@ -106,3 +107,25 @@ def test_event_simulator_agrees(jobs, policy):
     assert _relerr(des_exhaustive(jobs, policy), ref_es) < RTOL
     es, _ = fused(jobs, policy, "xla")
     assert _relerr(es, ref_es) < RTOL
+
+
+@settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(
+    jobs=workloads(max_stages=3),
+    policy=st.sampled_from(["sr", "serpt"]),
+    n_servers=st.sampled_from([2, 3]),
+)
+def test_multi_server_paths_agree(jobs, policy, n_servers):
+    """W-server parity: exact fused evaluator vs dense oracle vs an
+    exhaustive run of the unified DES, for n_servers in {2, 3}."""
+    assume(_no_index_ties(jobs, policy))
+    ref_es, ref_ea = oracle(jobs, policy, n_servers=n_servers)
+    assert _relerr(des_exhaustive(jobs, policy, n_servers=n_servers), ref_es) < RTOL
+    for impl in ("xla", "interpret"):
+        es, ea = fused(jobs, policy, impl, n_servers=n_servers)
+        assert _relerr(es, ref_es) < RTOL, impl
+        assert _relerr(ea, ref_ea) < RTOL, impl

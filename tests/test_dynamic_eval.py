@@ -8,11 +8,15 @@ successful jobs under a stage-level index policy" must agree to <= 1e-9:
 2. the seed materialized lockstep simulation (``evaluator._dynamic_batch``,
    retained as the <= 2^21 reference tier);
 3. the dense pure-Python oracle (``ref.ref_sojourn_dynamic``);
-4. an exhaustive run of the discrete-event simulator
-   (``simulate(..., n_servers=1)``) over every enumerated outcome.
+4. an exhaustive run of the unified discrete-event simulator
+   (``simulate(..., n_servers=W)``) over every enumerated outcome.
 
-Deterministic seeded cases run here unconditionally; the hypothesis
-property-based version lives in ``test_differential.py``.
+All four implementations take ``n_servers``: the multi-server cases pin
+the fused evaluator's W-server lockstep (busy-until registers, one
+dispatch per completion) against the dict-of-finish-times oracle and
+the DES engine's batched event heap.  Deterministic seeded cases run
+here unconditionally; the hypothesis property-based version lives in
+``test_differential.py``.
 """
 
 import dataclasses
@@ -43,10 +47,12 @@ def _tables(jobs, policy):
     return probs, durs, num_stages, idx
 
 
-def fused(jobs, policy, impl):
+def fused(jobs, policy, impl, n_servers=1):
     probs, durs, num_stages, idx = _tables(jobs, policy)
     with jax.experimental.enable_x64(True):
-        es, ea = sojourn_eval_dynamic(probs, durs, num_stages, idx, impl=impl)
+        es, ea = sojourn_eval_dynamic(
+            probs, durs, num_stages, idx, n_servers=n_servers, impl=impl
+        )
     return float(es[0]), float(ea[0])
 
 
@@ -68,13 +74,13 @@ def seed_batch(jobs, policy):
         )
 
 
-def oracle(jobs, policy):
+def oracle(jobs, policy, n_servers=1):
     probs, durs, num_stages, idx = _tables(jobs, policy)
-    return ref_sojourn_dynamic(probs, durs, num_stages, idx)
+    return ref_sojourn_dynamic(probs, durs, num_stages, idx, n_servers=n_servers)
 
 
-def des_exhaustive(jobs, policy):
-    """Weight-average ``simulate(..., n_servers=1)`` over every outcome."""
+def des_exhaustive(jobs, policy, n_servers=1):
+    """Weight-average ``simulate(..., n_servers=W)`` over every outcome."""
     outcomes, weights = evaluator.enumerate_outcomes(jobs)
     total = 0.0
     for outcome, w in zip(outcomes, weights):
@@ -82,7 +88,8 @@ def des_exhaustive(jobs, policy):
             dataclasses.replace(j, outcome_stage=int(s))
             for j, s in zip(jobs, outcome)
         ]
-        total += w * simulator.simulate(fixed, 1, policy).mean_sojourn_successful
+        res = simulator.simulate(fixed, n_servers, policy)
+        total += w * res.mean_sojourn_successful
     return total
 
 
@@ -127,6 +134,80 @@ def test_four_way_agreement_ragged(policy):
     for impl in IMPLS:
         es, _ = fused(jobs, policy, impl)
         assert _relerr(es, ref_es) < RTOL, impl
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("n_servers", (2, 3))
+@pytest.mark.parametrize("seed,n,m", [(0, 4, 2), (1, 5, 3), (2, 6, 2)])
+def test_multi_server_four_way_agreement(policy, n_servers, seed, n, m):
+    """W-server parity: fused (xla + interpret) vs dense oracle vs an
+    exhaustive run of the unified DES, and the evaluator entry point."""
+    rng = np.random.default_rng(seed)
+    jobs = generate_workload(rng, n, num_stages=m)
+    ref_es, _ = oracle(jobs, policy, n_servers=n_servers)
+    des = des_exhaustive(jobs, policy, n_servers=n_servers)
+    assert _relerr(des, ref_es) < RTOL
+    for impl in IMPLS:
+        es, _ = fused(jobs, policy, impl, n_servers=n_servers)
+        assert _relerr(es, ref_es) < RTOL, (impl, es, ref_es)
+    got = evaluator.expected_sojourn_dynamic(jobs, policy, n_servers=n_servers)
+    assert _relerr(got, ref_es) < RTOL
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_servers_exceed_jobs_matches_parallel_service(policy):
+    """W >= N: every job runs alone, so E[sojourn | success] is the
+    probability-weighted mean over success patterns of per-job total
+    sizes — checked against the oracle and monotonicity in W."""
+    rng = np.random.default_rng(9)
+    jobs = generate_workload(rng, 4, num_stages=3)
+    ref_es, ref_ea = oracle(jobs, policy, n_servers=4)
+    for w in (4, 6):  # saturated: more servers change nothing
+        for impl in IMPLS:
+            es, ea = fused(jobs, policy, impl, n_servers=w)
+            assert _relerr(es, ref_es) < RTOL
+            assert _relerr(ea, ref_ea) < RTOL
+    # adding servers never hurts the all-jobs mean sojourn
+    prev = float("inf")
+    for w in (1, 2, 3, 4):
+        _, ea = fused(jobs, policy, "xla", n_servers=w)
+        assert ea <= prev + 1e-12
+        prev = ea
+
+
+@pytest.mark.parametrize("n_servers", (2, 3))
+def test_multi_server_streamed_mc_matches_host_replay(n_servers):
+    """samples= mode at W>1: the streamed outcomes evaluated in-kernel
+    must match the host Threefry replay fed to the W-server oracle."""
+    from repro.kernels.sojourn_eval.ref import ref_mc_outcomes
+
+    rng = np.random.default_rng(23)
+    jobs = generate_workload(rng, 5, num_stages=2)
+    probs, durs, num_stages, idx = _tables(jobs, "sr")
+    seed, n_samples = 77, 512
+    outcomes, weights = ref_mc_outcomes(probs, num_stages, seed, n_samples)
+    want_es, want_ea = ref_sojourn_dynamic(
+        probs, durs, num_stages, idx,
+        outcomes=outcomes, weights=weights, n_servers=n_servers,
+    )
+    with jax.experimental.enable_x64(True):
+        for impl in IMPLS:
+            es, ea = sojourn_eval_dynamic(
+                probs, durs, num_stages, idx,
+                samples=(seed, n_samples), n_servers=n_servers, impl=impl,
+            )
+            assert _relerr(float(es[0]), want_es) < RTOL, impl
+            assert _relerr(float(ea[0]), want_ea) < RTOL, impl
+
+
+def test_materialized_tier_rejects_multi_server():
+    rng = np.random.default_rng(31)
+    jobs = generate_workload(rng, 4)
+    outcomes, weights = evaluator.enumerate_outcomes(jobs)
+    with pytest.raises(ValueError, match="single-server"):
+        evaluator.expected_sojourn_dynamic(
+            jobs, "sr", outcomes=outcomes, weights=weights, n_servers=2
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import policies, simulator, trace
-from repro.core.jobs import JobSpec, generate_workload
+from repro.core.jobs import JobSpec
 
 
 def test_paper_section_v_example():

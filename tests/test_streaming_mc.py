@@ -20,12 +20,14 @@ Plus the satellite guards: zero-survival clamping in
 ``policies._conditional_arrays`` and the ``REPRO_CACHE_DIR`` disk memo.
 """
 
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import evaluator, policies
 from repro.core.jobs import JobSpec, generate_workload
-from repro.kernels.sojourn_eval import rng, sojourn_eval, sojourn_eval_dynamic
+from repro.kernels.sojourn_eval import rng, sojourn_eval
 from repro.kernels.sojourn_eval.ref import ref_mc_outcomes
 
 IMPLS = ("xla", "interpret")
@@ -353,3 +355,62 @@ def test_disk_cache_off_keeps_legacy_stats_shape():
     stats = policies.cache_stats()
     assert stats["by_kind"]["idx_table:sr"] == {"hits": 1, "misses": 1}
     assert "disk_hits" not in stats
+
+
+def test_disk_cache_lru_eviction_and_counter(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    g = np.random.default_rng(54)
+    w_a, w_b, w_c = (generate_workload(g, 5) for _ in range(3))
+    policies.clear_workload_cache()
+    policies.reset_cache_stats()
+
+    policies.index_table(w_a, "sr")
+    (file_a,) = tmp_path.iterdir()
+    entry = file_a.stat().st_size
+    # bound fits two entries; the third store must evict the stalest
+    monkeypatch.setenv("REPRO_CACHE_DISK_BYTES", str(int(2.5 * entry)))
+    policies.index_table(w_b, "sr")
+    file_b = next(f for f in tmp_path.iterdir() if f != file_a)
+    assert "disk_evictions" not in policies.cache_stats()  # still under bound
+
+    # pin recency: a is fresh, b is stale -> b is the LRU victim
+    os.utime(file_a, (1_000, 1_000))
+    os.utime(file_b, (500, 500))
+    policies.index_table(w_c, "sr")
+    names = {f.name for f in tmp_path.iterdir()}
+    assert file_a.name in names and file_b.name not in names
+    assert len(names) == 2
+    assert policies.cache_stats()["disk_evictions"] == 1
+
+    # a disk *hit* refreshes the entry's mtime (loads count as uses)
+    policies.clear_workload_cache()
+    policies.index_table(w_a, "sr")
+    assert file_a.stat().st_mtime > 1_000
+
+    policies.reset_cache_stats()
+    assert "disk_evictions" not in policies.cache_stats()
+
+
+def test_disk_cache_unbounded_opt_out(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_CACHE_DISK_BYTES", "none")
+    g = np.random.default_rng(55)
+    policies.clear_workload_cache()
+    policies.reset_cache_stats()
+    for _ in range(4):
+        policies.index_table(generate_workload(g, 5), "sr")
+    assert len(list(tmp_path.iterdir())) == 4  # nothing evicted
+    assert "disk_evictions" not in policies.cache_stats()
+
+
+def test_ensure_cache_dir_respects_explicit_setting(tmp_path, monkeypatch):
+    explicit = tmp_path / "explicit"
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(explicit))
+    assert policies.ensure_cache_dir() == str(explicit)
+    assert explicit.is_dir()
+    # unset: falls back to the default location (created on demand)
+    monkeypatch.delenv("REPRO_CACHE_DIR")
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    got = policies.ensure_cache_dir()
+    assert got == str(tmp_path / "xdg" / "repro-workloads")
+    assert os.environ["REPRO_CACHE_DIR"] == got

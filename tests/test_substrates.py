@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticLM, TokenFileDataset
 from repro.optim.adamw import (
-    OptConfig, adafactor_init, adamw_init, apply_updates, global_norm,
+    OptConfig, adafactor_init, adamw_init, apply_updates,
 )
 from repro.optim.compress import dequantize, ef_compress, quantize
 from repro.optim.schedule import cosine_schedule, linear_warmup

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import evaluator, theory
-from repro.core.jobs import JobSpec, generate_workload
+from repro.core.jobs import generate_workload
 
 
 def test_poisson_binomial_is_distribution():
