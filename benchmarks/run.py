@@ -37,6 +37,17 @@ ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 
 
 def _save(name: str, obj) -> None:
+    """Write artifacts/bench/<name>.json.
+
+    Rows are wrapped as ``{"rows": ..., "workload_cache": cache_stats()}``
+    so every artifact records the workload-keyed cache behavior of the
+    run that produced it.
+    """
+    from repro.core import policies
+
+    if not isinstance(obj, dict):
+        obj = {"rows": obj}
+    obj = {**obj, "workload_cache": policies.cache_stats()}
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1)
@@ -380,10 +391,7 @@ def table_eval_dynamic(full: bool = False):
             "speedup": None, "max_relerr_vs_seed": None,
         })
 
-    _save("BENCH_eval_dynamic", {
-        "rows": rows,
-        "workload_cache": policies.cache_stats(),
-    })
+    _save("BENCH_eval_dynamic", {"rows": rows})
     return rows
 
 
@@ -494,7 +502,6 @@ def table_eval_mc(full: bool = False, smoke: bool = False):
         "impl": impl,
         "clt_control": control,
         "rows": [row],
-        "workload_cache": policies.cache_stats(),
     })
     return [{**row, "control_z_score": control["z_score"]}]
 
@@ -557,9 +564,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sample counts + interpret-mode kernels "
                          "(eval_mc only; CI crash canary)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persist the workload-keyed memo tier in DIR "
+                         "(overrides REPRO_CACHE_DIR)")
     args = ap.parse_args()
 
-    if args.full:
+    if args.cache_dir:
+        from repro.core import policies as _policies
+
+        os.environ["REPRO_CACHE_DIR"] = args.cache_dir
+        print(f"workload cache dir: {_policies.ensure_cache_dir()}")
+    elif args.full:
         # Paper-scale sweeps revisit the same workloads across tables and
         # reruns: persist the workload-keyed memo tier unless the user
         # already pointed REPRO_CACHE_DIR somewhere.

@@ -22,6 +22,7 @@ from repro.core import policies
 from repro.core.jobs import JobSpec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.train import Trainer, default_plan
+from repro.obs import MetricsRegistry, TraceRecorder, format_snapshot
 
 ARCH_POOL = ["qwen3-1.7b", "mamba2-1.3b", "mixtral-8x22b", "granite-3-8b",
              "llama3-8b", "jamba-v0.1-52b"]
@@ -55,6 +56,8 @@ def main():
     ap.add_argument("--steps-per-stage", type=int, default=5)
     ap.add_argument("--stages", type=int, default=3)
     ap.add_argument("--policy", default="rank", choices=["rank", "serpt", "sr", "fifo"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace JSON here")
     args = ap.parse_args()
 
     # index/duration tables for repeated runs persist across invocations
@@ -86,13 +89,18 @@ def main():
         jobs, args.servers, policy=args.policy, rng=rng,
         fault_cfg=FaultConfig(mtbf_hours=1e6),  # demo: no injected failures
     )
-    res = cm.run()
-    print(f"\nsojourn(successful) = {res.mean_sojourn_successful:.2f}s  "
-          f"sojourn(all) = {res.mean_sojourn_all:.2f}s")
-    print(f"successful: {res.n_success}/{res.n_jobs}  makespan {res.makespan:.2f}s")
+    metrics = MetricsRegistry()
+    recorder = TraceRecorder()
+    res = cm.run(recorder=recorder, metrics=metrics)
+    print()
+    print(format_snapshot(metrics.snapshot(), title=f"run metrics ({res.policy})"))
     for j in jobs:
         status = "SUCCESS" if j.success else f"terminated@stage{j.stage - 1}"
         print(f"  {j.name:22s} {status}")
+    if args.trace_out:
+        recorder.write_chrome_trace(args.trace_out)
+        print(f"\nwrote {len(recorder)} trace records -> {args.trace_out} "
+              "(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from repro.core.policies import (
     rank_values,
     sr_rank_values,
 )
+from repro.obs import format_snapshot, get_registry, profiling
 
 
 def worked_example():
@@ -49,5 +50,8 @@ def random_workload():
 
 if __name__ == "__main__":
     ensure_cache_dir()  # persist workload tables across invocations
+    profiling.enable()  # time the fused evaluator ops + cache tiers
     worked_example()
     random_workload()
+    print()
+    print(format_snapshot(get_registry().snapshot(), title="profiling"))

@@ -109,6 +109,10 @@ class _ClusterHooks(SchedulerHooks):
         # have overridden the realized outcome while the stage ran
         return int(self.mgr._outcomes[job])
 
+    def is_success(self, job: int) -> bool:
+        mgr = self.mgr
+        return bool(mgr._outcomes[job] == mgr.jobs[job].spec.num_stages - 1)
+
     def on_complete(self, job: int, now: float) -> None:
         tj = self.mgr.jobs[job]
         tj.completed = now
@@ -169,10 +173,24 @@ class ClusterManager:
             return float(wall)
         return float(self._stage_durs[j][stage])
 
-    def run(self, observer=None) -> ClusterResult:
+    def run(self, observer=None, recorder=None, metrics=None) -> ClusterResult:
+        """Schedule the jobs to completion; returns a :class:`ClusterResult`.
+
+        Args:
+          observer: deprecated bare callable ``observer(engine, now)``
+            (per-event, unbatched); prefer ``recorder``.
+          recorder: optional :class:`repro.obs.TraceRecorder` (or any
+            :class:`~repro.core.des.events.EngineObserver`) receiving
+            batched trace records; never changes scheduling results.
+          metrics: optional :class:`repro.obs.MetricsRegistry` populated
+            with the standard run metrics plus restart / straggler
+            counters.
+        """
         jobs = self.jobs
         n = len(jobs)
-        eng = Engine(n, self.n_servers, _ClusterHooks(self), observer=observer)
+        eng = Engine(
+            n, self.n_servers, _ClusterHooks(self), observer=[observer, recorder]
+        )
         for i, j in enumerate(jobs):
             eng.schedule(j.spec.arrival, ARRIVAL, i)
         for t, target in self.resize_events:
@@ -189,6 +207,14 @@ class ClusterManager:
             [self._outcomes[i] == jobs[i].spec.num_stages - 1 for i in range(n)]
         )
         sojourn = eng.completion - arrivals
+        if metrics is not None:
+            from repro.obs.metrics import record_run_metrics
+
+            record_run_metrics(metrics, eng, arrivals, success)
+            metrics.counter("jobs.restarts").inc(sum(j.restarts for j in jobs))
+            metrics.counter("jobs.straggler_redispatches").inc(
+                sum(j.straggler_redispatches for j in jobs)
+            )
         return ClusterResult(
             mean_sojourn_successful=float(sojourn[success].mean()) if success.any() else 0.0,
             mean_sojourn_all=float(np.nanmean(sojourn)),

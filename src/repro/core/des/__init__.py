@@ -9,4 +9,9 @@ from repro.core.des.engine import (  # noqa: F401
     ReadyQueue,
     ServerPool,
 )
+from repro.core.des.events import (  # noqa: F401
+    EVENT_NAMES,
+    EngineObserver,
+    TraceEvent,
+)
 from repro.core.des.hooks import SchedulerHooks  # noqa: F401

@@ -20,6 +20,15 @@ Semantics (the ones the fused lockstep evaluators in
   boundaries; every release path (stage completion *and* failure abort)
   checks the target, so ``len(running) + free <= target`` holds at every
   event and no server is leaked or double-freed.
+
+Observability: the engine emits one flat trace record per scheduling
+action (see :mod:`repro.core.des.events`) to attached
+:class:`~repro.core.des.events.EngineObserver` instances, buffered and
+dispatched in batches so tracing a million-event replay costs one
+observer call per ``batch_size`` records.  With no observer attached,
+no records are built.  Always-on aggregates (per-job service time,
+aborted-work time, the time integral of the server target) are cheap
+scalar updates and feed the metrics layer in :mod:`repro.obs`.
 """
 
 from __future__ import annotations
@@ -29,6 +38,17 @@ import itertools
 
 import numpy as np
 
+from repro.core.des.events import (
+    EV_ARRIVAL,
+    EV_CANCEL,
+    EV_COMPLETE,
+    EV_DISPATCH,
+    EV_FAILURE,
+    EV_RESIZE,
+    EV_RESTART,
+    EV_STAGE_DONE,
+    normalize_observers,
+)
 from repro.core.des.hooks import SchedulerHooks
 
 __all__ = [
@@ -125,6 +145,11 @@ class Engine:
     events, the first failure timer) and calls :meth:`run`.  Per-job
     progress lives in ``stage`` (stages completed so far) and
     ``completion`` (exit time, NaN while in system).
+
+    ``observer`` may be ``None``, an
+    :class:`~repro.core.des.events.EngineObserver` (batched typed trace
+    records), a deprecated bare callable ``observer(engine, now)``, or
+    a list mixing both.
     """
 
     def __init__(
@@ -136,15 +161,29 @@ class Engine:
     ):
         self.n_jobs = n_jobs
         self.hooks = hooks
-        self.observer = observer  # observer(engine, now) after each event
         self.pool = ServerPool(n_servers)
         self.ready = ReadyQueue()
         self.stage = np.zeros(n_jobs, dtype=np.int64)
         self.completion = np.full(n_jobs, np.nan)
         self.n_done = 0
         self.makespan = 0.0
+        self.now = 0.0
+        # always-on aggregates for the metrics layer (cheap scalar math)
+        self.service_time = np.zeros(n_jobs)  # completed-stage busy time
+        self.aborted_time = 0.0  # busy time thrown away by failure aborts
+        self._dispatch_time: dict[int, float] = {}
+        self._target_integral = 0.0  # ∫ target dt over [0, makespan]
+        self._t_target = 0.0
         self._events: list[tuple[float, int, int, object]] = []
         self._seq = itertools.count()
+        self._legacy, self._observers = normalize_observers(observer)
+        self._emit = bool(self._observers)
+        self._batch = (
+            min(max(1, int(o.batch_size)) for o in self._observers)
+            if self._observers
+            else 0
+        )
+        self._buf: list[tuple] = []
 
     # -- caller API -------------------------------------------------------
 
@@ -158,12 +197,17 @@ class Engine:
         via the epoch check.  The hook re-schedules the job's
         re-``ARRIVAL`` itself (e.g. after a checkpoint-restore window).
         """
+        span = self.now - self._dispatch_time.pop(job)
+        self.aborted_time += span
         self.pool.release(job)
+        if self._emit:
+            self._record(self.now, EV_RESTART, job, int(self.stage[job]), span)
 
     def run(self) -> None:
         events = self._events
         while events:
             now, _, kind, payload = heapq.heappop(events)
+            self.now = now
             # An armed-but-idle failure timer is not work; everything
             # else (including a stale STAGE_DONE) extends the makespan.
             if kind != FAILURE:
@@ -176,23 +220,61 @@ class Engine:
                 batch.append((k2, p2))
             for kind, payload in batch:
                 self._handle(kind, payload, now)
-                if self.observer is not None:
-                    self.observer(self, now)
+                for fn in self._legacy:
+                    fn(self, now)
             while self.pool.free > 0 and len(self.ready):
                 self._start(self.ready.pop(), now)
-            if self.observer is not None:
-                self.observer(self, now)
+            for fn in self._legacy:
+                fn(self, now)
+        # close the server-target time integral at the makespan
+        self._target_integral += self.pool.target * (self.makespan - self._t_target)
+        self._t_target = self.makespan
+        if self._emit:
+            self._flush()
+            for o in self._observers:
+                o.on_run_end(self)
+
+    @property
+    def busy_time(self) -> float:
+        """Total server-busy time (completed stages + aborted work)."""
+        return float(self.service_time.sum()) + self.aborted_time
+
+    @property
+    def target_integral(self) -> float:
+        """∫ server-target dt over the run (denominator of utilization)."""
+        return self._target_integral
 
     # -- internals --------------------------------------------------------
+
+    def _record(self, t: float, kind: int, job: int, stage: int, value: float):
+        pool = self.pool
+        self._buf.append(
+            (t, kind, job, stage, value,
+             len(self.ready), len(pool.running), pool.free, pool.target)
+        )
+        if len(self._buf) >= self._batch:
+            self._flush()
+
+    def _flush(self) -> None:
+        buf = self._buf
+        if not buf:
+            return
+        self._buf = []
+        for o in self._observers:
+            o.on_events(self, buf)
 
     def _handle(self, kind: int, payload: object, now: float) -> None:
         if kind == ARRIVAL:
             job = payload
-            self.ready.push(self.hooks.index(job, int(self.stage[job])), job)
+            stage = int(self.stage[job])
+            self.ready.push(self.hooks.index(job, stage), job)
+            if self._emit:
+                self._record(now, EV_ARRIVAL, job, stage, 0.0)
         elif kind == STAGE_DONE:
             job, epoch = payload
             if self.pool.running.get(job) != epoch:
                 return  # stale: the job was aborted and re-dispatched
+            self.service_time[job] += now - self._dispatch_time.pop(job)
             self.pool.release(job)
             done_stage = int(self.stage[job])
             self.stage[job] += 1
@@ -200,16 +282,31 @@ class Engine:
                 self.completion[job] = now
                 self.n_done += 1
                 self.hooks.on_complete(job, now)
+                if self._emit:
+                    ev = EV_COMPLETE if self.hooks.is_success(job) else EV_CANCEL
+                    self._record(now, ev, job, done_stage, 0.0)
             else:  # alive: re-compete with the whole queue (paper §V)
                 self.ready.push(self.hooks.index(job, done_stage + 1), job)
+                if self._emit:
+                    self._record(now, EV_STAGE_DONE, job, done_stage, 0.0)
         elif kind == RESIZE:
+            self._target_integral += self.pool.target * (now - self._t_target)
+            self._t_target = now
             self.pool.resize(payload)
+            if self._emit:
+                self._record(now, EV_RESIZE, -1, -1, float(payload))
         elif kind == FAILURE:
+            if self._emit:
+                self._record(now, EV_FAILURE, -1, -1, 0.0)
             self.hooks.on_failure(self, now)
         else:
             raise ValueError(f"unknown event kind {kind}")
 
     def _start(self, job: int, now: float) -> None:
         epoch = self.pool.acquire(job)
-        dur = self.hooks.stage_duration(job, int(self.stage[job]), now)
+        stage = int(self.stage[job])
+        dur = self.hooks.stage_duration(job, stage, now)
+        self._dispatch_time[job] = now
         self.schedule(now + dur, STAGE_DONE, (job, epoch))
+        if self._emit:
+            self._record(now, EV_DISPATCH, job, stage, dur)

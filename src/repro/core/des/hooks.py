@@ -8,6 +8,11 @@ a node failure — is delegated to a :class:`SchedulerHooks` instance.
 ``cluster/manager.py`` adds fault injection, straggler duplicate-and-race
 and real-runner callbacks.  Both therefore share one contention
 semantics, the one the fused lockstep evaluators replicate.
+
+Observers are a separate surface: the engine emits typed, batched trace
+records (:mod:`repro.core.des.events`) to
+:class:`~repro.core.des.events.EngineObserver` instances — hooks decide
+*behavior*, observers only *watch*.
 """
 
 from __future__ import annotations
@@ -47,6 +52,14 @@ class SchedulerHooks:
         raise NotImplementedError
 
     # -- optional ---------------------------------------------------------
+
+    def is_success(self, job: int) -> bool:
+        """Whether ``job``'s realized outcome is a *success* (vs an early
+        termination).  Classifies the exit trace record as ``complete``
+        or ``cancel``; frontends that know the job's stage count override
+        this with ``outcome(job) == num_stages - 1``.
+        """
+        return True
 
     def on_complete(self, job: int, now: float) -> None:
         """``job`` left the system at ``now`` (success or termination)."""

@@ -31,6 +31,7 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.core.jobs import Workload, pad_workload
+from repro.obs import profiling as _prof
 
 __all__ = [
     "workload_key",
@@ -169,6 +170,7 @@ def _disk_evict(root: str, keep: str) -> None:
     limit = _disk_limit_bytes()
     if limit is None:
         return
+    t_prof = _prof.tick()
     entries = []
     total = 0
     try:
@@ -198,6 +200,7 @@ def _disk_evict(root: str, keep: str) -> None:
         total -= size
         with _cache_lock:
             _disk_evictions += 1
+    _prof.tock("cache.disk_evict", t_prof)
 
 
 def _disk_load(path: str):
@@ -247,8 +250,13 @@ def workload_cached(kind: str, jobs: Workload, compute):
     """Memoize ``compute()`` under ``(kind, workload_key(jobs))``.
 
     Two tiers: the in-process LRU, then (when ``REPRO_CACHE_DIR`` is
-    set) a cross-process disk memo of one ``.npz`` per entry.
+    set) a cross-process disk memo of one ``.npz`` per entry.  With
+    :mod:`repro.obs.profiling` enabled, per-tier access latency is
+    recorded (``prof.cache.mem_hit`` / ``disk_load`` / ``miss_compute``
+    / ``disk_store`` / ``disk_evict`` histograms in the default
+    metrics registry).
     """
+    t_prof = _prof.tick()
     digest = workload_key(jobs)
     key = (kind, digest)
     with _cache_lock:
@@ -256,7 +264,9 @@ def workload_cached(kind: str, jobs: Workload, compute):
         if key in _cache:
             counters[0] += 1
             _cache.move_to_end(key)
-            return _cache[key]
+            value = _cache[key]
+            _prof.tock("cache.mem_hit", t_prof)
+            return value
         counters[1] += 1
     path = _disk_path(kind, digest)
     value = _disk_load(path) if path else None
@@ -264,13 +274,18 @@ def workload_cached(kind: str, jobs: Workload, compute):
         with _cache_lock:
             counters[2] += 1
         value = _freeze(value)
+        _prof.tock("cache.disk_load", t_prof)
     else:
         if path:
             with _cache_lock:
                 counters[3] += 1
+        t_compute = _prof.tick()
         value = _freeze(compute())
+        _prof.tock("cache.miss_compute", t_compute)
         if path:
+            t_store = _prof.tick()
             _disk_store(path, value)
+            _prof.tock("cache.disk_store", t_store)
     with _cache_lock:
         _cache[key] = value
         _cache.move_to_end(key)

@@ -62,10 +62,11 @@ def _realize_outcomes(jobs: Workload, rng: np.random.Generator | None) -> np.nda
 class _TableHooks(SchedulerHooks):
     """Trace-study hooks: everything is a precomputed table lookup."""
 
-    def __init__(self, idx_table, stage_durs, outcomes, stage_overhead):
+    def __init__(self, idx_table, stage_durs, outcomes, num_stages, stage_overhead):
         self.idx_table = idx_table
         self.stage_durs = stage_durs
         self.outcomes = outcomes
+        self.num_stages = num_stages
         self.stage_overhead = stage_overhead
 
     def index(self, job: int, stage: int) -> float:
@@ -77,6 +78,9 @@ class _TableHooks(SchedulerHooks):
     def outcome(self, job: int) -> int:
         return int(self.outcomes[job])
 
+    def is_success(self, job: int) -> bool:
+        return bool(self.outcomes[job] == self.num_stages[job] - 1)
+
 
 def simulate(
     jobs: Workload,
@@ -85,6 +89,8 @@ def simulate(
     idx_table: np.ndarray | None = None,
     rng: np.random.Generator | None = None,
     stage_overhead: float = 0.0,
+    recorder=None,
+    metrics=None,
 ) -> SimResult:
     """Run the online scheduler over a trace.
 
@@ -96,6 +102,12 @@ def simulate(
       idx_table: optional precomputed (N, M) index table (overrides policy).
       stage_overhead: optional fixed checkpoint overhead added per stage
         (0 reproduces the paper; >0 models checkpoint save cost).
+      recorder: optional :class:`repro.obs.TraceRecorder` (or any
+        :class:`~repro.core.des.events.EngineObserver`) receiving the
+        batched trace records; attaching one never changes results.
+      metrics: optional :class:`repro.obs.MetricsRegistry` populated
+        with the standard run metrics (sojourn percentiles by outcome,
+        busy fraction, wasted work).
     """
     n = len(jobs)
     # Workload-keyed cache: padded arrays, stage durations and the policy
@@ -107,7 +119,12 @@ def simulate(
     outcomes = _realize_outcomes(jobs, rng)
     arrivals = np.array([j.arrival for j in jobs])
 
-    eng = Engine(n, n_servers, _TableHooks(idx_table, stage_durs, outcomes, stage_overhead))
+    eng = Engine(
+        n,
+        n_servers,
+        _TableHooks(idx_table, stage_durs, outcomes, num_stages, stage_overhead),
+        observer=recorder,
+    )
     for i in range(n):
         eng.schedule(float(arrivals[i]), ARRIVAL, i)
     eng.run()
@@ -115,6 +132,10 @@ def simulate(
     success = outcomes == (num_stages - 1)
     sojourn = eng.completion - arrivals
     assert not np.any(np.isnan(sojourn)), "all jobs must finish"
+    if metrics is not None:
+        from repro.obs.metrics import record_run_metrics
+
+        record_run_metrics(metrics, eng, arrivals, success)
     return SimResult(
         mean_sojourn_successful=float(sojourn[success].mean()) if success.any() else 0.0,
         mean_sojourn_all=float(sojourn.mean()),

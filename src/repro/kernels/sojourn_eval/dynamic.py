@@ -85,6 +85,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.sojourn_eval import kernel as K
 from repro.kernels.sojourn_eval import rng
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
+from repro.obs import profiling
 
 __all__ = ["sojourn_eval_dynamic", "dynamic_sojourn_enum", "dynamic_sojourn_mc"]
 
@@ -634,8 +635,23 @@ def sojourn_eval_dynamic(
     contention by index) — the exact analogue of the unified DES with
     all arrivals at t=0.  Returns ``(P,)`` arrays (pass a single
     ``(N, M)`` table for ``P = 1``).
+
+    When :mod:`repro.obs.profiling` is enabled, each call is timed into
+    a ``prof.sojourn_eval.dynamic.<mode>.<impl>.seconds`` span.
     """
     impl = _resolve(impl)
+    mode = "mc" if samples is not None else "enum"
+    with profiling.span(f"sojourn_eval.dynamic.{mode}.{impl}"):
+        return _sojourn_eval_dynamic(
+            probs, stage_durs, num_stages, idx_tables,
+            samples=samples, n_servers=n_servers, impl=impl,
+        )
+
+
+def _sojourn_eval_dynamic(
+    probs, stage_durs, num_stages, idx_tables, *,
+    samples=None, n_servers=1, impl="xla",
+) -> tuple[np.ndarray, np.ndarray]:
     if n_servers < 1:
         raise ValueError(f"n_servers must be >= 1; got {n_servers}")
     probs = np.asarray(probs)

@@ -48,6 +48,7 @@ import numpy as np
 from repro.kernels.sojourn_eval import kernel as K
 from repro.kernels.sojourn_eval import rng
 from repro.kernels.sojourn_eval.ref import mixed_radix_strides
+from repro.obs import profiling
 
 __all__ = ["sojourn_eval"]
 
@@ -225,8 +226,28 @@ def sojourn_eval(
     samples: tuple[int, int] | None = None,  # (seed, n_samples) streamed MC
     impl: Impl = "auto",
 ) -> tuple[np.ndarray, np.ndarray]:
-    """(E[sojourn successful], E[sojourn all]) per order; see module doc."""
+    """(E[sojourn successful], E[sojourn all]) per order; see module doc.
+
+    When :mod:`repro.obs.profiling` is enabled, each call is timed into
+    a ``prof.sojourn_eval.static.<mode>.<impl>.seconds`` span (the
+    numpy conversions inside synchronize the device work, so the span
+    is end-to-end wall clock).
+    """
     impl = _resolve(impl)
+    mode = "mc" if samples is not None else (
+        "enum" if outcomes is None else "outcomes"
+    )
+    with profiling.span(f"sojourn_eval.static.{mode}.{impl}"):
+        return _sojourn_eval(
+            sizes, probs, num_stages, orders,
+            outcomes=outcomes, weights=weights, samples=samples, impl=impl,
+        )
+
+
+def _sojourn_eval(
+    sizes, probs, num_stages, orders, *,
+    outcomes=None, weights=None, samples=None, impl="xla",
+) -> tuple[np.ndarray, np.ndarray]:
     if samples is not None and outcomes is not None:
         raise ValueError("samples= and outcomes= are mutually exclusive")
     sizes = np.asarray(sizes)

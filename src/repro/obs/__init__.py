@@ -1,0 +1,26 @@
+"""Observability: trace recording, metrics, profiling (docs/observability.md).
+
+Three pieces, wired through every scheduling layer:
+
+* :class:`TraceRecorder` (:mod:`repro.obs.recorder`) — a batching DES
+  observer exporting Chrome-trace/Perfetto JSON, per-server Gantt
+  tables and queue-depth / utilization series from both frontends
+  (``simulate(..., recorder=...)``, ``ClusterManager.run(recorder=...)``).
+* :class:`MetricsRegistry` (:mod:`repro.obs.metrics`) — counters /
+  gauges / histograms with a JSON snapshot, replacing ad-hoc result
+  dicts; both frontends populate it via ``metrics=``.
+* :mod:`repro.obs.profiling` — opt-in wall-clock spans around the fused
+  ``sojourn_eval`` ops and the workload-cache tiers, surfaced in the
+  same registry snapshot.
+
+``python -m repro.obs.report`` replays a synthetic Philly-trace
+workload and writes the trace + metrics artifacts.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    MetricsRegistry,
+    format_snapshot,
+    get_registry,
+    record_run_metrics,
+)
+from repro.obs.recorder import TraceRecorder, validate_chrome_trace  # noqa: F401
